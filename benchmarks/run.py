@@ -1,0 +1,163 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
+quantity: counts, MB, speedups, ...). Sections:
+
+  table1   — HE MM operation counts (paper Table I) for the Table III grid
+  table2   — parameter sets + §III-B3 cost-model numbers (0.43/3.6 MB, ...)
+  eq24     — MO-HLT on-chip requirement + reduction factor (Fig. 2 / Eq. 24)
+  fig6     — measured HLT/HE MM latency: baseline vs hoisted vs MO schedules
+             (CPU, reduced N) + the paper's FPGA speedups for reference
+  kernels  — Pallas kernel calls (interpret mode) vs jnp oracle
+  roofline — §Roofline table from results/dryrun/*.json (if present)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def _t(fn, *args, reps=3, **kw):
+    fn(*args, **kw)                    # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    _block(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def _block(x):
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:
+        pass
+
+
+def row(name, us, derived):
+    print(f"{name},{us if us is None else round(us, 1)},{derived}",
+          flush=True)
+
+
+def bench_table1():
+    from repro.core.costmodel import CostModel
+    from repro.core.params import SET_A
+    from repro.configs.fame_sets import MM_BENCHMARKS
+    cm = CostModel(SET_A)
+    for set_name, grid in MM_BENCHMARKS.items():
+        for typ, (m, l, n) in grid.items():
+            c = cm.table1_counts(m, l, n)["total"]
+            row(f"table1/{set_name}/{typ}/{m}-{l}-{n}", None,
+                f"Rot={c['Rot']};CMult={c['CMult']};Add={c['Add']};"
+                f"Mult={c['Mult']};Depth={c['Depth']}")
+
+
+def bench_table2_costmodel():
+    from repro.core.costmodel import report
+    from repro.core.params import SET_A, SET_B, SET_C
+    for p in (SET_A, SET_B, SET_C):
+        r = report(p, "paper")
+        row(f"costmodel/{p.name}/B_ct", None, f"{r['B_ct_MB']:.2f}MB")
+        row(f"costmodel/{p.name}/M_hemm", None, f"{r['M_hemm_MB']:.1f}MB")
+        row(f"costmodel/{p.name}/M_mo_hlt", None,
+            f"{r['M_mo_hlt_MB']:.1f}MB")
+        row(f"costmodel/{p.name}/reduction", None,
+            f"{r['reduction_x']:.1f}x")
+
+
+def bench_fig6_schedules():
+    """Measured on CPU at reduced N (structure identical to the paper's):
+    per-HLT latency for each schedule + full HE MM."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import hlt as hlt_mod
+    from repro.core.ckks import CkksEngine
+    from repro.core.hemm import plan_hemm, encrypt_matrix, hemm
+    from repro.core.params import toy_params
+
+    eng = CkksEngine(toy_params(logN=8, L=4, k=3, beta=2, scale_bits=26))
+    rng = np.random.default_rng(0)
+    m = l = n = 8                       # Type-IV (square) at reduced scale
+    plan = plan_hemm(eng, m, l, n)
+    keys = eng.keygen(rng, rot_steps=plan.rot_steps)
+    A = rng.uniform(-1, 1, (m, l))
+    B = rng.uniform(-1, 1, (l, n))
+    ctA = encrypt_matrix(eng, keys, A, rng)
+    ctB = encrypt_matrix(eng, keys, B, rng)
+    ds = plan.ds_sigma
+
+    us_base, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys,
+                                        schedule="baseline"), reps=1)
+    us_hoist, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys,
+                                         schedule="hoisted"), reps=1)
+    us_mo, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys, schedule="mo"),
+                  reps=3)
+    row("fig6/hlt/baseline", us_base, f"d={ds.d}")
+    row("fig6/hlt/hoisted", us_hoist,
+        f"speedup_vs_baseline={us_base / us_hoist:.2f}x")
+    row("fig6/hlt/mo", us_mo,
+        f"speedup_vs_baseline={us_base / us_mo:.2f}x")
+    us_mm, _ = _t(lambda: hemm(eng, ctA, ctB, plan, keys, schedule="mo"),
+                  reps=1)
+    row("fig6/hemm/8-8-8/mo", us_mm, "depth=3")
+    row("fig6/paper/avg_speedup", None, "221x (FPGA, paper Fig. 6)")
+    row("fig6/paper/max_speedup", None, "1337x (160-160-160 Set-C)")
+
+
+def bench_kernels():
+    import jax.numpy as jnp
+    from repro.core.params import toy_params, get_context
+    from repro.kernels import ops, ref
+    ctx = get_context(toy_params(logN=10, L=3, k=2, beta=2))
+    rng = np.random.default_rng(0)
+    p = ctx.params
+    M = p.num_total
+    qs = np.asarray(ctx.moduli_host, np.uint64)[:, None]
+    x = rng.integers(0, qs, (M, p.N)).astype(np.uint32)
+    y = rng.integers(0, qs, (M, p.N)).astype(np.uint32)
+    import jax
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    us, _ = _t(ops.modmul, xj, yj, ctx.moduli_u32, ctx.qneg_inv)
+    row("kernels/modmul", us, f"{M}x{p.N} u32")
+    us_r, _ = _t(ref.modmul_ref, xj, yj, ctx.moduli_u32, ctx.qneg_inv)
+    row("kernels/modmul_ref", us_r, "oracle")
+    xb = jnp.asarray(x[None])
+    us, _ = _t(ops.ntt, xb, ctx.psi_brv_mont, ctx.moduli_u32, ctx.qneg_inv)
+    row("kernels/ntt", us, f"N={p.N} M={M}")
+
+
+def bench_roofline():
+    import glob
+    import json
+    import os
+    base = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    files = sorted(glob.glob(os.path.join(base, "*__pod.json")))
+    for f in files[:50]:
+        r = json.load(open(f))
+        if not r.get("ok") or "roofline" in r and r.get("skipped"):
+            continue
+        t = r.get("roofline")
+        if not t:
+            continue
+        dom = r.get("dominant", "?")
+        row(f"roofline/{r['arch']}/{r['shape']}", None,
+            f"compute={t['compute_s']:.2e}s;memory={t['memory_s']:.2e}s;"
+            f"collective={t['collective_s']:.2e}s;dom={dom}")
+
+
+def main() -> None:
+    import repro  # noqa: F401
+    print("name,us_per_call,derived")
+    sections = [bench_table1, bench_table2_costmodel, bench_fig6_schedules,
+                bench_kernels, bench_roofline]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for fn in sections:
+        if only and only not in fn.__name__:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

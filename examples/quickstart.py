@@ -1,0 +1,34 @@
+"""Quickstart: encrypted matrix multiplication in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Encrypts two matrices under CKKS, multiplies them fully under encryption
+(paper Algorithm 2 with the MO-HLT datapath), decrypts, and checks against
+the plaintext product.
+"""
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core.ckks import CkksEngine
+from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix, hemm
+from repro.core.params import toy_params
+
+rng = np.random.default_rng(0)
+eng = CkksEngine(toy_params(logN=7, L=4, k=3, beta=2))
+
+m, l, n = 4, 3, 5                       # paper Fig. 1 example shape
+plan = plan_hemm(eng, m, l, n)
+keys = eng.keygen(rng, rot_steps=plan.rot_steps)
+
+A = rng.uniform(-1, 1, (m, l))
+B = rng.uniform(-1, 1, (l, n))
+ctA = encrypt_matrix(eng, keys, A, rng)   # both inputs encrypted
+ctB = encrypt_matrix(eng, keys, B, rng)
+
+ctC = hemm(eng, ctA, ctB, plan, keys, schedule="mo")   # MO-HLT datapath
+C = decrypt_matrix(eng, keys, ctC, m, n)
+
+err = np.abs(C - A @ B).max()
+print("max error vs plaintext matmul:", err)
+assert err < 0.05
+print("ok: HE MM == plaintext MM (depth used: 3 levels)")

@@ -1,0 +1,12 @@
+"""repro — JAX/TPU reproduction of FAME (secure HE matrix multiplication).
+
+The CKKS substrate uses 64-bit integer intermediates on CPU (oracle path) and a
+u32 Montgomery path for TPU Pallas kernels; x64 must be enabled before any jax
+arrays are created, so we do it at package import (MaxText-style global flag).
+Model code uses explicit dtypes throughout and is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

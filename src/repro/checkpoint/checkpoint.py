@@ -1,0 +1,138 @@
+"""Checkpoint/restart for fault tolerance and elastic scaling.
+
+Design (mesh-agnostic): every leaf is saved as its full logical array in a
+flat .npz per pytree ("unsharded-by-host" — on a real multi-host fleet each
+host writes its owned shard files; the loader re-shards onto whatever mesh
+the restarted job has, so a job restarted with a different device count
+resumes cleanly). Atomic rename + retained history + async snapshot thread.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+
+SEP = "§"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":     # npz can't round-trip bf16
+            arr = arr.astype(np.float32)     # exact upcast
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    def fill(path, leaf):
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        try:
+            return arr.astype(leaf.dtype)
+        except ValueError:                   # e.g. f32 -> bf16 via jax
+            import jax.numpy as jnp
+            return np.asarray(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_map_with_path(fill, template)
+
+
+def save(ckpt_dir: str, step: int, state, extra: Optional[dict] = None,
+         keep: int = 3) -> str:
+    """Atomic checkpoint write; prunes to the newest `keep` checkpoints."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "state.npz"), **_flatten(state))
+    meta = {"step": step, "time": time.time(), **(extra or {})}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic commit
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.startswith(".tmp"):
+            try:
+                out.append(int(d.split("_")[1]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, state_template, step: Optional[int] = None,
+            shardings=None):
+    """Load into the (possibly abstract) template; device_put with the target
+    shardings re-shards for the current mesh (elastic resume)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    assert step is not None, f"no checkpoints in {ckpt_dir}"
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with np.load(os.path.join(path, "state.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    state = _unflatten_into(state_template, flat)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x,
+            state, shardings)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return state, meta
+
+
+class AsyncCheckpointer:
+    """Snapshot-on-host then write in a background thread so the train loop
+    is blocked only for the device->host copy, not the disk write."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, step: int, state, extra: Optional[dict] = None):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)     # snapshot
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_state, extra), daemon=True)
+        self._thread.start()
+
+    def _write(self, step, host_state, extra):
+        self.last_path = save(self.ckpt_dir, step, host_state, extra,
+                              keep=self.keep)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

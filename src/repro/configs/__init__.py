@@ -1,0 +1,5 @@
+from repro.configs.registry import (ARCHS, SHAPES, cells_for, get_config,
+                                    get_smoke_config, all_cells)
+
+__all__ = ["ARCHS", "SHAPES", "cells_for", "get_config", "get_smoke_config",
+           "all_cells"]

@@ -1,0 +1,65 @@
+"""Galois automorphisms ψ_g: a(X) -> a(X^g) — the Rot index mapping.
+
+Tables are prime-independent (pure index permutations), cached per (N, g).
+
+* coefficient domain: X^i -> ±X^{g·i mod N} (sign flips when g·i mod 2N >= N).
+* evaluation domain (bit-reversed order, matching core/ntt.py): a pure
+  permutation — root ψ^(2r+1) maps to ψ^((2r+1)g), composed with bit-reversal
+  on both sides. Verified against the coeff-domain path in tests.
+
+Rotation by r slots uses g = 5^r mod 2N; conjugation uses g = 2N-1.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import modmath as mm
+
+
+def galois_elt_rot(r: int, N: int) -> int:
+    """Galois element for a circular left rotation by r slots."""
+    slots = N // 2
+    return pow(5, r % slots, 2 * N)
+
+
+def galois_elt_conj(N: int) -> int:
+    return 2 * N - 1
+
+
+@functools.lru_cache(maxsize=None)
+def coeff_tables(N: int, g: int):
+    """(src, sign): out[j] = sign[j] ? -a[src[j]] : a[src[j]] in coeff domain."""
+    i = np.arange(N, dtype=np.int64)
+    gi = (g * i) % (2 * N)
+    j = gi % N
+    neg = gi >= N
+    src = np.empty(N, dtype=np.int64)
+    sign = np.empty(N, dtype=bool)
+    src[j] = i
+    sign[j] = neg
+    return src, sign   # numpy: lru-cached values must be trace-safe
+
+
+@functools.lru_cache(maxsize=None)
+def eval_perm(N: int, g: int) -> np.ndarray:
+    """perm: out_eval[j] = in_eval[perm[j]], bit-reversed eval order."""
+    brv = mm.bit_reverse_indices(N)
+    j = np.arange(N, dtype=np.int64)
+    r = brv[j]                                  # natural eval index
+    rp = ((2 * r + 1) * g % (2 * N) - 1) // 2   # source natural eval index
+    return brv[rp]   # numpy: lru-cached values must be trace-safe
+
+
+def apply_coeff(x, N: int, g: int, q):
+    """x: (..., M, N) coeff domain, q: (M, 1) u64 moduli."""
+    src, sign = coeff_tables(N, g)
+    v = x[..., src]
+    return jnp.where(sign, mm.negmod(v, q), v)
+
+
+def apply_eval(x, N: int, g: int):
+    """x: (..., M, N) bit-reversed eval domain. Pure gather, no arithmetic."""
+    return x[..., eval_perm(N, g)]

@@ -1,0 +1,132 @@
+"""Paper §III cost model: on-chip memory requirement for HE MM (Eqs. 16–24),
+operation counts (Table I), and off-chip/HBM traffic estimates.
+
+Two word models:
+ * ``paper``  — B_coeff = logq_paper/8 bytes per coefficient (54-bit FPGA
+   words); reproduces the §III-B3 numbers (0.43/3.6 MB Set-A, 6.7/61 MB Set-B,
+   27/255 MB Set-C, Eq. 24 ≈ 29 MB).
+ * ``tpu``    — 4-byte u32 words with ~2× the limb count for equal log Q
+   (DESIGN.md §3); drives VMEM BlockSpec sizing and the roofline memory term.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.params import HEParams
+from repro.core.hemm import diag_count_formulas
+
+MB = float(1 << 20)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    params: HEParams
+    word_model: str = "paper"     # "paper" | "tpu"
+
+    # -- data sizes (§III-B1) ------------------------------------------------
+
+    @property
+    def bytes_per_coeff(self) -> float:
+        if self.word_model == "paper":
+            return self.params.logq_paper / 8.0
+        return 4.0
+
+    @property
+    def b_limb(self) -> float:
+        return self.params.N * self.bytes_per_coeff
+
+    def b_ct(self, nlimbs: int | None = None) -> float:
+        """Eq. 17 (at full level by default): 2 polys × limbs × limb bytes."""
+        n = self.params.num_main if nlimbs is None else nlimbs
+        return 2.0 * n * self.b_limb
+
+    def b_evk(self, nlimbs_ext: int | None = None) -> float:
+        """Eq. 18."""
+        p = self.params
+        n = (p.L + p.k + 1) if nlimbs_ext is None else nlimbs_ext
+        return 2.0 * p.beta * n * self.b_limb
+
+    # -- on-chip memory requirement (§III-B2) ---------------------------------
+
+    @property
+    def m_keyswitch(self) -> float:
+        """Eq. 19: output Ct + β-digit extended expansion of one poly."""
+        p = self.params
+        return self.b_ct() + 0.5 * p.beta * self.b_ct(p.L + p.k + 1)
+
+    @property
+    def m_rot(self) -> float:
+        """Eq. 20: + original (a,b) and ψ(a)."""
+        return self.m_keyswitch + 1.5 * self.b_ct()
+
+    @property
+    def m_hlt_s1(self) -> float:
+        """Eq. 21: one input buffer + two output buffers (+ in-place MAC)."""
+        return self.m_rot + 3.0 * self.b_ct()
+
+    @property
+    def m_hlt_s2(self) -> float:
+        """Eq. 22: two input buffers (A^(0), B^(0) reused across iterations)."""
+        return self.m_rot + 4.0 * self.b_ct()
+
+    @property
+    def m_hemm(self) -> float:
+        """Eq. 23: + accumulator Ct_AB."""
+        return self.m_hlt_s2 + self.b_ct()
+
+    @property
+    def m_mo_hlt(self) -> float:
+        """Eq. 24: MO-HLT stores one Ct + (β+1) intermediate limbs."""
+        return self.b_ct() + (self.params.beta + 1) * self.b_limb
+
+    # -- traffic model ---------------------------------------------------------
+
+    def baseline_hlt_traffic(self, d: int, sram_bytes: float) -> float:
+        """Off-chip Ct traffic of the coarse-grained HLT (Fig. 2(A)) when the
+        working set (m_hlt_s2) exceeds on-chip memory: every Rot spills the
+        extended Ct between sub-operations (read+write per KeySwitch stage:
+        Decomp/ModUp out, KeyIP in+out, ModDown in+out)."""
+        if self.m_hemm <= sram_bytes:
+            return 2.0 * self.b_ct()          # just input + output
+        p = self.params
+        ext = 0.5 * p.beta * self.b_ct(p.L + p.k + 1)
+        per_rot = 2.0 * (ext + self.b_ct(p.L + p.k + 1))   # spill + refill
+        return 2.0 * self.b_ct() + d * per_rot
+
+    def mo_hlt_traffic(self, d: int, sram_bytes: float) -> float:
+        """MO-HLT: input Ct read + output Ct write; only the unfused BaseConv
+        stages (ModUp/ModDown) round-trip limbs when the Ct exceeds on-chip."""
+        base = 2.0 * self.b_ct()
+        if self.m_mo_hlt <= sram_bytes:
+            return base
+        p = self.params
+        return base + 2.0 * (p.k + 1) * self.b_limb * 2.0
+
+    # -- Table I ---------------------------------------------------------------
+
+    def table1_counts(self, m: int, l: int, n: int) -> dict:
+        d = diag_count_formulas(m, l, n)
+        phi = d["sigma"] + d["tau"]
+        zeta = l * (d["eps"] + d["omega"])
+        return {
+            "step1": {"Add": phi, "Mult": 0, "CMult": phi, "Rot": phi, "Depth": 1},
+            "step2": {"Add": zeta + l, "Mult": l, "CMult": zeta, "Rot": zeta,
+                      "Depth": 2},
+            "total": {"Add": phi + zeta + l, "Mult": l, "CMult": phi + zeta,
+                      "Rot": phi + zeta, "Depth": 3},
+        }
+
+
+def report(params: HEParams, word_model: str = "paper") -> dict:
+    cm = CostModel(params, word_model)
+    return {
+        "set": params.name,
+        "word_model": word_model,
+        "B_ct_MB": cm.b_ct() / MB,
+        "M_keyswitch_MB": cm.m_keyswitch / MB,
+        "M_rot_MB": cm.m_rot / MB,
+        "M_hlt_s2_MB": cm.m_hlt_s2 / MB,
+        "M_hemm_MB": cm.m_hemm / MB,
+        "M_mo_hlt_MB": cm.m_mo_hlt / MB,
+        "reduction_x": cm.m_hemm / cm.m_mo_hlt,
+    }

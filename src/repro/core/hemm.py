@@ -1,0 +1,224 @@
+"""Homomorphic Encrypted Matrix Multiplication (paper §II-C, Algorithm 2).
+
+General method (HEGMM/Eq. 1):  A_{m×l} × B_{l×n} = Σ_k (ε^k∘σ(A)) ⊙ (ω^k∘τ(B)),
+each transformation applied homomorphically as an HLT over the flattened
+(column-major) matrix vector.
+
+Key schedule-level optimization carried from the paper: the hoisting product
+of Ct_{A^(0)} / Ct_{B^(0)} is computed ONCE and reused across all l ε^k / ω^k
+HLTs of Step 2 (Algorithm 3 lines 1–2 amortized over Step 2's 2·l HLTs).
+
+Baselines (paper §VI-A) are provided in two forms:
+ * runnable: E2DM-S (pad to square), E2DM-R (pad to rect-compatible),
+   Huang et al. (general method, unhoisted per-rotation KeySwitch schedule),
+   HEGMM-En (this module's general method) — all on the same CKKS engine;
+ * analytic op-count models in core/costmodel.py for the Table-I benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import hlt as hlt_mod
+from repro.core.ckks import Ciphertext, CkksEngine, Keys
+from repro.core.hlt import DiagSet, encode_diagonals, hoist
+
+
+# ---------------------------------------------------------------------------
+# transformation matrices (Eqs. 6–9), column-major flattening
+# ---------------------------------------------------------------------------
+
+
+def u_sigma(m: int, l: int) -> np.ndarray:
+    U = np.zeros((m * l, m * l), dtype=np.float64)
+    i = np.arange(m)[:, None]
+    j = np.arange(l)[None, :]
+    U[(i + j * m).ravel(), (i + ((i + j) % l) * m).ravel()] = 1.0
+    return U
+
+
+def u_tau(l: int, n: int) -> np.ndarray:
+    U = np.zeros((l * n, l * n), dtype=np.float64)
+    i = np.arange(l)[:, None]
+    j = np.arange(n)[None, :]
+    U[(i + j * l).ravel(), (((i + j) % l) + j * l).ravel()] = 1.0
+    return U
+
+
+def u_eps(k: int, m: int, l: int, n: int) -> np.ndarray:
+    U = np.zeros((m * n, m * l), dtype=np.float64)
+    r = np.arange(m * n)
+    U[r, (k * m + r) % (m * l)] = 1.0
+    return U
+
+
+def u_omega(k: int, m: int, l: int, n: int) -> np.ndarray:
+    U = np.zeros((m * n, l * n), dtype=np.float64)
+    r = np.arange(m * n)
+    U[r, (k + r % m) % l + (r // m) * l] = 1.0
+    return U
+
+
+def diag_count_formulas(m: int, l: int, n: int) -> dict:
+    """Paper Eqs. 12–15 (validated against the numeric diagonals in tests)."""
+    return {
+        "sigma": 2 * min(m, l) - 1,
+        "tau": 2 * min(n, l) - 1,
+        "eps": n // l + 1,
+        "omega": 2 if m == l else n * (m // l + 2),
+    }
+
+
+def diag_count_exact(m: int, l: int, n: int) -> dict:
+    """Exact ambient-diagonal counts (per-k lists for ε/ω).
+
+    Reproduction note (EXPERIMENTS.md): the paper's Eqs. 14–15 are exact under
+    the divisibility conditions they implicitly assume (l | n for ε; m = l or
+    l | m for ω) and otherwise off by a small constant — e.g. 4-3-5 has an ε^2
+    with 3 diagonals vs ⌊n/l⌋+1 = 2, while ω stays BELOW n(⌊m/l⌋+2).
+    """
+    r = np.arange(m * n)
+    eps = []
+    omg = []
+    for k in range(l):
+        eps.append(len(np.unique((k * m + r) % (m * l) - r)))
+        omg.append(len(np.unique((k + r % m) % l + (r // m) * l - r)))
+    return {"sigma": 2 * min(m, l) - 1, "tau": 2 * min(n, l) - 1,
+            "eps": eps, "omega": omg}
+
+
+def min_logN(m: int, l: int, n: int) -> int:
+    """Eq. 16 generalized: slots must hold both inputs AND the m×n output."""
+    need = 2 * max(m * l, l * n, m * n)
+    return max(1, math.ceil(math.log2(need)))
+
+
+# ---------------------------------------------------------------------------
+# plan + execution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HeMMPlan:
+    m: int
+    l: int
+    n: int
+    ds_sigma: DiagSet
+    ds_tau: DiagSet
+    ds_eps: list
+    ds_omega: list
+    rot_steps: tuple
+
+    @property
+    def total_rotations(self) -> int:
+        return (self.ds_sigma.d + self.ds_tau.d
+                + sum(d.d for d in self.ds_eps)
+                + sum(d.d for d in self.ds_omega))
+
+
+def plan_hemm(eng: CkksEngine, m: int, l: int, n: int,
+              scale: Optional[float] = None) -> HeMMPlan:
+    p = eng.params
+    assert max(m * l, l * n, m * n) <= p.slots, \
+        f"{(m, l, n)} needs logN >= {min_logN(m, l, n)} (have {p.logN})"
+    enc = lambda U: encode_diagonals(eng, U, scale)
+    ds_sigma = enc(u_sigma(m, l))
+    ds_tau = enc(u_tau(l, n))
+    ds_eps = [enc(u_eps(k, m, l, n)) for k in range(l)]
+    ds_omega = [enc(u_omega(k, m, l, n)) for k in range(l)]
+    steps = set()
+    for ds in [ds_sigma, ds_tau, *ds_eps, *ds_omega]:
+        steps.update(z for z in ds.zs if z != 0)
+    return HeMMPlan(m, l, n, ds_sigma, ds_tau, ds_eps, ds_omega,
+                    tuple(sorted(steps)))
+
+
+def encrypt_matrix(eng: CkksEngine, keys: Keys, X: np.ndarray,
+                   rng: np.random.Generator) -> Ciphertext:
+    """Column-major flatten into the first rows·cols slots (paper Fig. 1)."""
+    vec = np.asarray(X, dtype=np.float64).flatten(order="F")
+    return eng.encrypt(eng.encode(vec), keys, rng)
+
+
+def decrypt_matrix(eng: CkksEngine, keys: Keys, ct: Ciphertext,
+                   m: int, n: int) -> np.ndarray:
+    vals = eng.decrypt_decode(ct, keys, num=m * n).real
+    return vals.reshape((m, n), order="F")
+
+
+def hemm(eng: CkksEngine, ctA: Ciphertext, ctB: Ciphertext, plan: HeMMPlan,
+         keys: Keys, schedule: str = "mo",
+         rotation_chunk: Optional[int] = None) -> Ciphertext:
+    """Algorithm 2. Consumes 3 levels (2 HLTs + 1 Mult·Rescale); L >= 4."""
+    H = lambda ct, ds, hst=None: hlt_mod.hlt(
+        eng, ct, ds, keys, schedule=schedule, rotation_chunk=rotation_chunk,
+        hoisted=hst)
+    # Step 1
+    ctA0 = H(ctA, plan.ds_sigma)
+    ctB0 = H(ctB, plan.ds_tau)
+    # Step 2 — hoist once, reuse across all l HLTs of each input
+    hstA = hoist(eng, ctA0) if schedule != "baseline" else None
+    hstB = hoist(eng, ctB0) if schedule != "baseline" else None
+    acc: Optional[Ciphertext] = None
+    for k in range(plan.l):
+        ctAk = H(ctA0, plan.ds_eps[k], hstA)
+        ctBk = H(ctB0, plan.ds_omega[k], hstB)
+        prod = eng.rescale(eng.mult(ctAk, ctBk, keys))
+        acc = prod if acc is None else eng.add(acc, prod)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# baselines (§VI-A)
+# ---------------------------------------------------------------------------
+
+
+def _pad(X: np.ndarray, rows: int, cols: int) -> np.ndarray:
+    out = np.zeros((rows, cols), dtype=np.float64)
+    out[: X.shape[0], : X.shape[1]] = X
+    return out
+
+
+@dataclasses.dataclass
+class BaselineRun:
+    """A baseline = (shape padding rule, HLT schedule)."""
+    name: str
+    pad_shape: tuple          # (m', l', n') actually multiplied
+    schedule: str
+
+
+def baseline_spec(name: str, m: int, l: int, n: int) -> BaselineRun:
+    if name == "e2dm-s":
+        s = max(m, l, n)
+        return BaselineRun(name, (s, s, s), "baseline")
+    if name == "e2dm-r":
+        if n <= l:
+            return BaselineRun(name, (m, l, l), "baseline")
+        if m <= l:
+            return BaselineRun(name, (l, l, n), "baseline")
+        s = max(m, l, n)
+        return BaselineRun(name, (s, s, s), "baseline")
+    if name == "huang":
+        return BaselineRun(name, (m, l, n), "baseline")   # general, unhoisted
+    if name == "hegmm-en":
+        return BaselineRun(name, (m, l, n), "hoisted")
+    raise ValueError(name)
+
+
+def hemm_baseline(eng: CkksEngine, name: str, A: np.ndarray, B: np.ndarray,
+                  keys_factory, rng: np.random.Generator):
+    """Run a baseline end-to-end. keys_factory(rot_steps) -> Keys (so each
+    baseline gets exactly the rotation keys its plan needs)."""
+    m, l, n = A.shape[0], A.shape[1], B.shape[1]
+    spec = baseline_spec(name, m, l, n)
+    mp, lp, np_ = spec.pad_shape
+    plan = plan_hemm(eng, mp, lp, np_)
+    keys = keys_factory(plan.rot_steps)
+    ctA = encrypt_matrix(eng, keys, _pad(A, mp, lp), rng)
+    ctB = encrypt_matrix(eng, keys, _pad(B, lp, np_), rng)
+    ct = hemm(eng, ctA, ctB, plan, keys, schedule=spec.schedule)
+    return decrypt_matrix(eng, keys, ct, mp, np_)[:m, :n], plan

@@ -1,0 +1,328 @@
+"""Homomorphic Linear Transformation — the paper's bottleneck and contribution.
+
+Three schedules, mathematically equivalent (verified bit-exactly in tests):
+
+* ``baseline``  — Algorithm 1 / Fig. 2(A): coarse-grained rotation loop; every
+  Rot runs a full KeySwitch (Decomp→ModUp→KeyIP→ModDown per rotation), and a
+  Rescale at the end. Maximal intermediate-ciphertext traffic.
+
+* ``hoisted``   — Algorithm 3: Decomp/ModUp hoisted out of the rotation loop
+  (shared by all d rotations), DiagIP accumulates in the extended basis PQ_ℓ,
+  and ONE merged ModDown+Rescale (PQ_ℓ → Q_{ℓ-1}) finishes the HLT.
+
+* ``mo``        — MO-HLT / Fig. 2(B): same math as ``hoisted`` with the loop
+  order inverted — **limb outer, rotation inner** — expressed as a lax.scan
+  over the extended limb axis. Per-limb working set is (β+1) limb rows
+  (Eq. 24) when rotation_chunk=1. On TPU this schedule is realized by the
+  fused Pallas kernel (kernels/fused_hlt.py) with a grid over limbs, and by
+  limb-parallel sharding at the distributed level (BaseConv is the only
+  limb-coupling stage, hence the only collective).
+
+The a-part (c0) is "scale-raised" into PQ_ℓ (multiply by [P]_{q_i}, zero on
+special limbs) so DiagIP can accumulate both output polys in the extended
+basis and share the single final ModDown — this is how Algorithm 3's
+``ModUp(a)`` is realized exactly without a BaseConv.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import automorph, modmath as mm, ntt
+from repro.core.ckks import Ciphertext, CkksEngine, Keys, Plaintext
+
+
+@dataclasses.dataclass
+class DiagSet:
+    """Non-zero diagonals of a transformation matrix U, encoded over the FULL
+    prime basis (sliceable to any level / extended basis)."""
+    zs: tuple[int, ...]
+    pt: jnp.ndarray                  # (d, M_total, N) eval-domain residues
+    scale: float
+    shape: tuple[int, int]           # U is (rows, cols)
+
+    @property
+    def d(self) -> int:
+        return len(self.zs)
+
+
+@dataclasses.dataclass
+class Hoisted:
+    """Hoisting product: reusable across every HLT applied to the same ct."""
+    digits: jnp.ndarray              # (β', M_ext, N) eval, full extended basis
+    c0_ext: jnp.ndarray              # (M_ext, N) eval, P·c0 (zeros on specials)
+    c1_ext: jnp.ndarray              # (M_ext, N) eval, P·c1 (for the z=0 term)
+    level: int
+    scale: float
+
+
+# ---------------------------------------------------------------------------
+# diagonal encoding
+# ---------------------------------------------------------------------------
+
+
+def encode_diagonals(eng: CkksEngine, U: np.ndarray,
+                     scale: Optional[float] = None) -> DiagSet:
+    """Halevi–Shoup ambient-rotation decomposition: U·m = Σ_z u_z ⊙ ρ(m; z).
+
+    u_z[i] = U[i, i+z] (zero elsewhere); exact when slots >= max(rows, cols)
+    because out-of-range rotated slots read zero padding (DESIGN.md §2).
+    """
+    p = eng.params
+    rows, cols = U.shape
+    assert max(rows, cols) <= p.slots, (U.shape, p.slots)
+    scale = p.scale if scale is None else scale
+    full = list(range(p.num_total))
+    zs, pts = [], []
+    for z in range(-(rows - 1), cols):
+        i0, i1 = max(0, -z), min(rows, cols - z)
+        if i1 <= i0:
+            continue
+        i = np.arange(i0, i1)
+        vals = U[i, i + z]
+        if not np.any(vals != 0):
+            continue
+        vec = np.zeros(p.slots)
+        vec[i] = vals
+        zs.append(z)
+        pts.append(eng.encode_to_basis(vec, full, scale))
+    return DiagSet(zs=tuple(zs), pt=jnp.stack(pts), scale=scale,
+                   shape=(rows, cols))
+
+
+# ---------------------------------------------------------------------------
+# hoisting
+# ---------------------------------------------------------------------------
+
+
+def hoist(eng: CkksEngine, ct: Ciphertext) -> Hoisted:
+    """Decomp + ModUp once (Algorithm 3 lines 1–2)."""
+    p = eng.params
+    ell = ct.level
+    bases = eng.tools.digit_bases(ell)
+    full = bases[0][2]
+    pos = {g: i for i, g in enumerate(full)}
+    digs = []
+    for (own, gen, _) in bases:
+        dig_eval = ct.c1[own[0]: own[-1] + 1]
+        coeff = eng._intt(dig_eval, eng.basis(own))
+        ext = eng.tools.mod_up(coeff, own, gen)
+        ext_eval = eng._ntt(ext, eng.basis(gen))
+        x = jnp.zeros((len(full), p.N), dtype=jnp.uint32)
+        x = x.at[np.array([pos[i] for i in own])].set(dig_eval)
+        x = x.at[np.array([pos[i] for i in gen])].set(ext_eval)
+        digs.append(x)
+    return Hoisted(digits=jnp.stack(digs),
+                   c0_ext=_scale_raise(eng, ct.c0, ell),
+                   c1_ext=_scale_raise(eng, ct.c1, ell),
+                   level=ell, scale=ct.scale)
+
+
+def _scale_raise(eng: CkksEngine, x, ell: int):
+    """x (ℓ+1, N) over Q_ℓ  ->  P·x over Q_ℓ ∪ P (zeros on special limbs)."""
+    p = eng.params
+    Pprod = 1
+    for i in range(p.num_main, p.num_total):
+        Pprod *= eng.ctx.moduli_host[i]
+    pres = np.array([Pprod % eng.ctx.moduli_host[i] for i in range(ell + 1)],
+                    dtype=np.uint64)[:, None]
+    view = eng.main_basis(ell)
+    top = mm.mulmod(x, jnp.asarray(pres).astype(jnp.uint32), view.moduli)
+    return jnp.concatenate(
+        [top, jnp.zeros((p.k, p.N), dtype=jnp.uint32)], axis=0)
+
+
+def _gather_keys(eng: CkksEngine, keys: Keys, zs, nbeta: int, full):
+    """Stack rot-key rows for the current basis: (d, β', M_ext, N) ×2.
+    The z=0 entry (identity rotation) is never indexed; use zeros."""
+    rows = np.asarray(full)
+    k0s, k1s = [], []
+    for z in zs:
+        if z == 0:
+            k0s.append(jnp.zeros((nbeta, len(full), eng.params.N), jnp.uint32))
+            k1s.append(k0s[-1])
+            continue
+        g = automorph.galois_elt_rot(z, eng.params.N)
+        key = keys.galois[g]
+        k0s.append(key.k0[:nbeta][:, rows])
+        k1s.append(key.k1[:nbeta][:, rows])
+    return jnp.stack(k0s), jnp.stack(k1s)
+
+
+def _perm_table(eng: CkksEngine, zs) -> np.ndarray:
+    """(d, N) eval-domain automorph gather indices (identity for z=0)."""
+    p = eng.params
+    perms = []
+    for z in zs:
+        if z == 0:
+            perms.append(np.arange(p.N, dtype=np.int64))
+        else:
+            perms.append(np.asarray(automorph.eval_perm(
+                p.N, automorph.galois_elt_rot(z, p.N))))
+    return np.stack(perms)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def hlt(eng: CkksEngine, ct: Ciphertext, diags: DiagSet, keys: Keys,
+        schedule: str = "mo", rotation_chunk: Optional[int] = None,
+        hoisted: Optional[Hoisted] = None) -> Ciphertext:
+    """Ct' = Rescale( Σ_t u_{z_t} ⊙ Rot(Ct; z_t) )  — Algorithm 1's semantics."""
+    if schedule == "baseline":
+        return _hlt_baseline(eng, ct, diags, keys)
+    hst = hoisted if hoisted is not None else hoist(eng, ct)
+    if schedule == "hoisted":
+        return _hlt_hoisted(eng, hst, diags, keys)
+    if schedule == "mo":
+        return _hlt_mo(eng, hst, diags, keys, rotation_chunk)
+    raise ValueError(schedule)
+
+
+def _hlt_baseline(eng: CkksEngine, ct, diags: DiagSet, keys: Keys) -> Ciphertext:
+    p = eng.params
+    ell = ct.level
+    view = eng.main_basis(ell)
+    acc: Optional[Ciphertext] = None
+    for t, z in enumerate(diags.zs):
+        rt = ct if z == 0 else eng.rotate(ct, z, keys)
+        pt = Plaintext(diags.pt[t][: ell + 1], ell, diags.scale)
+        term = eng.cmult(rt, pt)
+        acc = term if acc is None else eng.add(acc, term)
+    return eng.rescale(acc)
+
+
+def _accumulate(eng, hst: Hoisted, diags: DiagSet, keys: Keys, full, view,
+                t_indices, acc0, acc1):
+    """Shared rotation-loop body (full-Ct-level, coarse ordering)."""
+    nbeta = hst.digits.shape[0]
+    p = eng.params
+    rows = np.asarray(full)
+    for t in t_indices:
+        z = diags.zs[t]
+        u = diags.pt[t][rows]
+        if z == 0:
+            acc0 = mm.addmod(acc0, mm.mulmod(u, hst.c0_ext, view.moduli), view.moduli)
+            acc1 = mm.addmod(acc1, mm.mulmod(u, hst.c1_ext, view.moduli), view.moduli)
+            continue
+        g = automorph.galois_elt_rot(z, p.N)
+        key = keys.galois[g]
+        d_rot = automorph.apply_eval(hst.digits, p.N, g)
+        c0_rot = automorph.apply_eval(hst.c0_ext, p.N, g)
+        k0 = jnp.zeros_like(acc0)
+        k1 = jnp.zeros_like(acc1)
+        for j in range(nbeta):
+            k0 = mm.addmod(k0, mm.mulmod(d_rot[j], key.k0[j][rows], view.moduli),
+                           view.moduli)
+            k1 = mm.addmod(k1, mm.mulmod(d_rot[j], key.k1[j][rows], view.moduli),
+                           view.moduli)
+        acc0 = mm.addmod(acc0, mm.mulmod(u, mm.addmod(k0, c0_rot, view.moduli),
+                                         view.moduli), view.moduli)
+        acc1 = mm.addmod(acc1, mm.mulmod(u, k1, view.moduli), view.moduli)
+    return acc0, acc1
+
+
+def _finish(eng: CkksEngine, hst: Hoisted, diags: DiagSet, acc0, acc1) -> Ciphertext:
+    ell = hst.level
+    c0 = eng._mod_down_eval(acc0, ell, drop_last=True)
+    c1 = eng._mod_down_eval(acc1, ell, drop_last=True)
+    q_ell = eng.ctx.moduli_host[ell]
+    return Ciphertext(c0, c1, ell - 1, hst.scale * diags.scale / q_ell)
+
+
+def _hlt_hoisted(eng: CkksEngine, hst: Hoisted, diags: DiagSet, keys: Keys) -> Ciphertext:
+    full = eng.tools.digit_bases(hst.level)[0][2]
+    view = eng.basis(full)
+    acc0 = jnp.zeros((len(full), eng.params.N), dtype=jnp.uint32)
+    acc1 = jnp.zeros_like(acc0)
+    acc0, acc1 = _accumulate(eng, hst, diags, keys, full, view,
+                             range(diags.d), acc0, acc1)
+    return _finish(eng, hst, diags, acc0, acc1)
+
+
+_MO_JIT_CACHE: dict = {}
+
+
+def _mo_pipeline(eng: CkksEngine, level: int, nbeta: int, d: int, chunk: int):
+    """Cached jitted limb-outer pipeline (incl. merged ModDown+Rescale)."""
+    key = (id(eng), level, nbeta, d, chunk)
+    fn = _MO_JIT_CACHE.get(key)
+    if fn is not None:
+        return fn
+    p = eng.params
+    full = eng.tools.digit_bases(level)[0][2]
+    view = eng.basis(full)
+
+    def pipeline(digits, c0e, c1e, u_all, rk0, rk1, perms, is_id):
+        xs = dict(
+            dig=jnp.swapaxes(digits, 0, 1),       # (M, β', N)
+            c0e=c0e,                              # (M, N)
+            c1e=c1e,
+            u=jnp.swapaxes(u_all, 0, 1),          # (M, d, N)
+            k0=jnp.swapaxes(rk0, 0, 2),           # (M, β', d, N)
+            k1=jnp.swapaxes(rk1, 0, 2),
+            q=view.moduli,                        # (M, 1)
+        )
+
+        def limb_body(x):
+            q = x["q"]                            # (1,)
+            a0 = jnp.zeros((p.N,), dtype=jnp.uint32)
+            a1 = jnp.zeros_like(a0)
+            for s in range(0, d, chunk):
+                e = min(s + chunk, d)
+                pm = perms[s:e]                   # (c, N)
+                dig_rot = x["dig"][:, pm]         # (β', c, N) gather
+                c0_rot = x["c0e"][pm]             # (c, N)
+                k0 = jnp.zeros((e - s, p.N), dtype=jnp.uint32)
+                k1 = jnp.zeros_like(k0)
+                for j in range(nbeta):
+                    k0 = mm.addmod(k0, mm.mulmod(dig_rot[j], x["k0"][j, s:e], q), q)
+                    k1 = mm.addmod(k1, mm.mulmod(dig_rot[j], x["k1"][j, s:e], q), q)
+                # z=0 entries bypass KeyIP: (P·c0, P·c1) directly
+                sel = is_id[s:e][:, None]
+                t0 = jnp.where(sel, x["c0e"][None], mm.addmod(k0, c0_rot, q))
+                t1 = jnp.where(sel, x["c1e"][None], k1)
+                u = x["u"][s:e]
+                a0 = mm.addmod(a0, _reduce_add(mm.mulmod(u, t0, q), q), q)
+                a1 = mm.addmod(a1, _reduce_add(mm.mulmod(u, t1, q), q), q)
+            return a0, a1
+
+        acc0, acc1 = jax.lax.map(limb_body, xs)
+        c0 = eng._mod_down_eval(acc0, level, drop_last=True)
+        c1 = eng._mod_down_eval(acc1, level, drop_last=True)
+        return c0, c1
+
+    fn = jax.jit(pipeline)
+    _MO_JIT_CACHE[key] = fn
+    return fn
+
+
+def _hlt_mo(eng: CkksEngine, hst: Hoisted, diags: DiagSet, keys: Keys,
+            rotation_chunk: Optional[int]) -> Ciphertext:
+    """Limb-outer / rotation-inner schedule over the extended basis."""
+    full = eng.tools.digit_bases(hst.level)[0][2]
+    nbeta = hst.digits.shape[0]
+    rk0, rk1 = _gather_keys(eng, keys, diags.zs, nbeta, full)   # (d, β', M, N)
+    perms = _perm_table(eng, diags.zs)                          # (d, N)
+    u_all = diags.pt[:, np.asarray(full)]                       # (d, M, N)
+    is_id = jnp.asarray(np.array([z == 0 for z in diags.zs]))   # (d,)
+    d = diags.d
+    chunk = d if rotation_chunk is None else max(1, min(rotation_chunk, d))
+    fn = _mo_pipeline(eng, hst.level, nbeta, d, chunk)
+    c0, c1 = fn(hst.digits, hst.c0_ext, hst.c1_ext, u_all, rk0, rk1,
+                perms, is_id)
+    q_ell = eng.ctx.moduli_host[hst.level]
+    return Ciphertext(c0, c1, hst.level - 1,
+                      hst.scale * diags.scale / q_ell)
+
+
+def _reduce_add(x, q):
+    """Sum (c, N) mod q along axis 0 in u64 (c·q < 2^63 safe)."""
+    return (jnp.sum(x.astype(jnp.uint64), axis=0) % q).astype(jnp.uint32)

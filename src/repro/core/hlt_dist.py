@@ -1,0 +1,301 @@
+"""Distributed MO-HLT: the paper's datapath as one SPMD program.
+
+Mapping (DESIGN.md §3): RNS limbs shard over the `model` mesh axis (limbs are
+independent through NTT/Automorph/KeyIP/DiagIP — the fused stages), ciphertext
+batch shards over `pod`×`data`. BaseConv (ModUp/ModDown) is the only
+limb-coupling stage → the only collective, exactly the paper's "only unfused
+sub-operations incur off-chip traffic" translated to collective volume.
+
+Arithmetic is the TPU-native u32 Montgomery path end to end (no u64), so the
+lowered HLO is what a real v5e deployment would run. The float correction in
+BaseConv is f32 on this path (f64 on the CPU oracle path) — configurable, and
+the CPU test uses f64 to check bit-exactness against core/hlt.py's MO schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import automorph, modmath as mm, ntt
+from repro.core.params import HEParams, get_context
+from repro.core.rns import RnsTools
+
+
+# ---------------------------------------------------------------------------
+# constant tables (host-built, baked into the jitted program)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistTables:
+    params: HEParams
+    d: int
+    full: tuple                    # prime indices [Q_L..., P...]
+    q32: np.ndarray                # (M,1) u32
+    qneg: np.ndarray               # (M,1)
+    r2: np.ndarray                 # (M,1)
+    psi_m: np.ndarray              # (M,N) mont twiddles
+    psii_m: np.ndarray
+    ninv_m: np.ndarray             # (M,1) mont
+    perms: np.ndarray              # (d,N) int32
+    p_raise_m: np.ndarray          # (L+1,1) [P]_{q_i} in mont form
+    digits: list                   # per digit: dict(own, gen, tables...)
+    md: dict                       # merged ModDown+Rescale tables
+    ctb: int
+
+
+def _mont(x: np.ndarray, qs: np.ndarray) -> np.ndarray:
+    return ((x.astype(np.uint64) << np.uint64(32)) % qs.astype(np.uint64)
+            ).astype(np.uint32)
+
+
+def build_tables(params: HEParams, d: int, ctb: int) -> DistTables:
+    ctx = get_context(params)
+    tools = RnsTools(ctx)
+    L, N = params.L, params.N
+    full = tuple(range(L + 1)) + tuple(range(params.num_main, params.num_total))
+    M = len(full)
+    qs = np.array([ctx.moduli_host[i] for i in full], dtype=np.uint64)[:, None]
+    q32 = qs.astype(np.uint32)
+    qneg = np.empty((M, 1), np.uint32)
+    r2 = np.empty((M, 1), np.uint32)
+    for r_, i in enumerate(full):
+        a, b = mm.mont_constants(ctx.moduli_host[i])
+        qneg[r_, 0], r2[r_, 0] = a, b
+    rows = np.asarray(full)
+    psi_m = np.asarray(ctx.psi_brv_mont)[rows]
+    psii_m = np.asarray(ctx.psi_inv_brv_mont)[rows]
+    ninv_m = _mont(np.asarray(ctx.n_inv)[rows].astype(np.uint64), qs)
+
+    # rotation permutations: z = -(d//2) .. +(d - d//2 - 1), 0 = identity
+    zs = list(range(-(d // 2), d - d // 2))
+    perms = np.stack([
+        np.arange(N, dtype=np.int32) if z == 0 else
+        np.asarray(automorph.eval_perm(
+            N, automorph.galois_elt_rot(z, N)), dtype=np.int32)
+        for z in zs])
+
+    Pprod = 1
+    for i in range(params.num_main, params.num_total):
+        Pprod *= ctx.moduli_host[i]
+    p_raise = np.array([Pprod % ctx.moduli_host[i] for i in range(L + 1)],
+                       dtype=np.uint64)[:, None]
+    p_raise_m = _mont(p_raise, qs[: L + 1])
+
+    pos = {g: i for i, g in enumerate(full)}
+    digits = []
+    for own, gen, _ in tools.digit_bases(L):
+        hat_inv, W, D_mod_t, inv_d = tools._bc_tables(own, gen)
+        own_q = np.array([ctx.moduli_host[i] for i in own],
+                         dtype=np.uint64)[:, None]
+        gen_q = np.array([ctx.moduli_host[i] for i in gen],
+                         dtype=np.uint64)[:, None]
+        digits.append(dict(
+            own_rows=np.array([pos[i] for i in own]),
+            gen_rows=np.array([pos[i] for i in gen]),
+            hat_inv_m=_mont(np.asarray(hat_inv, np.uint64), own_q),
+            # W from _bc_tables is already (|gen|, |own|)
+            W_m=_mont(np.asarray(W, np.uint64), gen_q)[:, :, None],
+            D_mod_m=_mont(np.asarray(D_mod_t, np.uint64), gen_q),
+            inv_d=np.asarray(inv_d, np.float64),
+        ))
+
+    # merged ModDown+Rescale: drop specials + q_L
+    spec = tuple(range(params.num_main, params.num_total))
+    P_ext = spec + (L,)
+    Q_out = tuple(range(L))
+    hat_inv, W, D_mod_t, inv_d = tools._bc_tables(P_ext, Q_out)
+    pe_q = np.array([ctx.moduli_host[i] for i in P_ext],
+                    dtype=np.uint64)[:, None]
+    qo_q = np.array([ctx.moduli_host[i] for i in Q_out],
+                    dtype=np.uint64)[:, None]
+    p_inv = tools._moddown_tables(P_ext, Q_out)
+    md = dict(
+        drop_rows=np.array([pos[i] for i in P_ext]),
+        out_rows=np.array([pos[i] for i in Q_out]),
+        hat_inv_m=_mont(np.asarray(hat_inv, np.uint64), pe_q),
+        W_m=_mont(np.asarray(W, np.uint64), qo_q)[:, :, None],
+        D_mod_m=_mont(np.asarray(D_mod_t, np.uint64), qo_q),
+        inv_d=np.asarray(inv_d, np.float64),
+        p_inv_m=_mont(np.asarray(p_inv, np.uint64), qo_q),
+    )
+    return DistTables(params, d, full, q32, qneg, r2, psi_m, psii_m, ninv_m,
+                      perms, p_raise_m, digits, md, ctb)
+
+
+# ---------------------------------------------------------------------------
+# mont building blocks (broadcast over leading ct-batch axis)
+# ---------------------------------------------------------------------------
+
+
+def _mod_reduce(x, q32, axis: int):
+    """Tree-reduce modular sum along `axis` with montadd (u32-safe)."""
+    n = x.shape[axis]
+    while n > 1:
+        h = n // 2
+        a = jax.lax.slice_in_dim(x, 0, h, axis=axis)
+        b = jax.lax.slice_in_dim(x, h, 2 * h, axis=axis)
+        rest = jax.lax.slice_in_dim(x, 2 * h, n, axis=axis)
+        x = jnp.concatenate([mm.montadd(a, b, q32), rest], axis=axis)
+        n = n - h
+    return jnp.squeeze(x, axis=axis)
+
+
+def _base_conv_mont(x, t, fp_dtype):
+    """x: (..., |own|, N) coeff std-domain. Returns (..., |gen|, N)."""
+    q_own, q_gen = t["q_own"], t["q_gen"]          # (|own|,1), (|gen|,1)
+    y = mm.montmul(x, t["hat_inv_m"], q_own, t["qneg_own"])
+    v = jnp.floor(jnp.sum(y.astype(fp_dtype) * t["inv_d"].astype(fp_dtype),
+                          axis=-2) + 0.5e-6).astype(jnp.uint32)  # (..., N)
+    prod = mm.montmul(y[..., None, :, :], t["W_m"], q_gen[..., None, :],
+                      t["qneg_gen"][..., None, :])  # (..., |gen|, |own|, N)
+    acc = _mod_reduce(prod, q_gen[..., None, :], axis=-2)
+    corr = mm.montmul(v[..., None, :], t["D_mod_m"], q_gen, t["qneg_gen"])
+    return mm.montsub(acc, corr, q_gen)
+
+
+def _mk_bc_tables(tabs: DistTables, spec: dict):
+    own = spec.get("own_rows", spec.get("drop_rows"))
+    gen = spec.get("gen_rows", spec.get("out_rows"))
+    return dict(
+        hat_inv_m=jnp.asarray(spec["hat_inv_m"]),
+        W_m=jnp.asarray(spec["W_m"]),
+        D_mod_m=jnp.asarray(spec["D_mod_m"]),
+        inv_d=jnp.asarray(spec["inv_d"]),
+        q_own=jnp.asarray(tabs.q32[own]), qneg_own=jnp.asarray(tabs.qneg[own]),
+        q_gen=jnp.asarray(tabs.q32[gen]), qneg_gen=jnp.asarray(tabs.qneg[gen]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the SPMD MO-HLT program
+# ---------------------------------------------------------------------------
+
+
+def make_mo_hlt_fn(tabs: DistTables, rules=None, fp_dtype=jnp.float32,
+                   unroll: int = 1):
+    """Returns fn(c0, c1, u_mont, rk0_mont, rk1_mont) -> (c0', c1').
+
+    c0, c1: (CTB, L+1, N) u32 std-domain eval.
+    u_mont: (d, M, N); rk{0,1}_mont: (d, β, M, N) — Montgomery domain.
+    Output: (CTB, L, N) ×2 (one level consumed — merged ModDown+Rescale)."""
+    p = tabs.params
+    L, N, M = p.L, p.N, len(tabs.full)
+    nb = len(tabs.digits)
+    q32 = jnp.asarray(tabs.q32)
+    qneg = jnp.asarray(tabs.qneg)
+    psi_m, psii_m = jnp.asarray(tabs.psi_m), jnp.asarray(tabs.psii_m)
+    ninv_m = jnp.asarray(tabs.ninv_m)
+    perms = jnp.asarray(tabs.perms)
+    dig_bc = [_mk_bc_tables(tabs, s) for s in tabs.digits]
+    md_bc = _mk_bc_tables(tabs, tabs.md)
+    md = tabs.md
+
+    def cshard(x, *axes):
+        if rules is None:
+            return x
+        from repro.distributed.sharding import sanitize_spec
+        return rules.constrain(x, *sanitize_spec(rules, axes, x.shape))
+
+    def fn(c0, c1, u_mont, rk0_mont, rk1_mont):
+        c0 = cshard(c0, "ct_batch", "limbs", None)
+        c1 = cshard(c1, "ct_batch", "limbs", None)
+        # ---- hoist: Decomp + ModUp (BaseConv = the collective stage) ----
+        digs = []
+        for j, spec in enumerate(tabs.digits):
+            own, gen = spec["own_rows"], spec["gen_rows"]
+            dig_eval = c1[:, own[0]: own[-1] + 1]
+            coeff = ntt.intt_mont(dig_eval, psii_m[own], ninv_m[own],
+                                  q32[own], qneg[own])
+            ext = _base_conv_mont(coeff, dig_bc[j], fp_dtype)
+            ext = cshard(ext, "ct_batch", "limbs", None)
+            ext_eval = ntt.ntt_mont(ext, psi_m[gen], q32[gen], qneg[gen])
+            x = jnp.zeros((c1.shape[0], M, N), jnp.uint32)
+            x = x.at[:, own].set(dig_eval).at[:, gen].set(ext_eval)
+            digs.append(x)
+        digits = jnp.stack(digs, axis=1)                    # (CTB, β, M, N)
+        digits = cshard(digits, "ct_batch", None, "limbs", None)
+        zeros_sp = jnp.zeros((c0.shape[0], p.k, N), jnp.uint32)
+        c0e = jnp.concatenate(
+            [mm.montmul(c0, jnp.asarray(tabs.p_raise_m), q32[: L + 1],
+                        qneg[: L + 1]), zeros_sp], axis=1)
+        c1e = jnp.concatenate(
+            [mm.montmul(c1, jnp.asarray(tabs.p_raise_m), q32[: L + 1],
+                        qneg[: L + 1]), zeros_sp], axis=1)
+
+        # ---- rotation loop (fused Automorph→KeyIP→DiagIP, limb-local) ----
+        def body(acc, t):
+            a0, a1 = acc
+            pm = perms[t]
+            dig_rot = jnp.take(digits, pm, axis=-1)
+            c0r = jnp.take(c0e, pm, axis=-1)
+            k0 = jnp.zeros_like(a0)
+            k1 = jnp.zeros_like(a1)
+            for j in range(nb):
+                k0 = mm.montadd(k0, mm.montmul(dig_rot[:, j], rk0_mont[t, j],
+                                               q32, qneg), q32)
+                k1 = mm.montadd(k1, mm.montmul(dig_rot[:, j], rk1_mont[t, j],
+                                               q32, qneg), q32)
+            is_id = (t == tabs.d // 2)      # z=0 slot bypasses KeyIP
+            t0 = jnp.where(is_id, c0e, mm.montadd(k0, c0r, q32))
+            t1 = jnp.where(is_id, c1e, k1)
+            a0 = mm.montadd(a0, mm.montmul(u_mont[t], t0, q32, qneg), q32)
+            a1 = mm.montadd(a1, mm.montmul(u_mont[t], t1, q32, qneg), q32)
+            a0 = cshard(a0, "ct_batch", "limbs", None)
+            a1 = cshard(a1, "ct_batch", "limbs", None)
+            return (a0, a1), None
+
+        z = jnp.zeros((c0.shape[0], M, N), jnp.uint32)
+        # unroll>1 lets XLA fuse several rotations per HBM round-trip of the
+        # hoisted digits (the paper's VMEM-residency win, approximated in
+        # XLA; the Pallas fused kernel realizes it exactly — §Perf set-c)
+        (acc0, acc1), _ = jax.lax.scan(body, (z, z), jnp.arange(tabs.d),
+                                       unroll=unroll)
+
+        # ---- merged ModDown+Rescale (second collective stage) ----
+        def mod_down(acc):
+            drop, out = md["drop_rows"], md["out_rows"]
+            xp = ntt.intt_mont(acc[:, drop], psii_m[drop], ninv_m[drop],
+                               q32[drop], qneg[drop])
+            conv = _base_conv_mont(xp, md_bc, fp_dtype)
+            conv_eval = ntt.ntt_mont(conv, psi_m[out], q32[out], qneg[out])
+            diff = mm.montsub(acc[:, out], conv_eval, q32[out])
+            return mm.montmul(diff, jnp.asarray(md["p_inv_m"]), q32[out],
+                              qneg[out])
+
+        return mod_down(acc0), mod_down(acc1)
+
+    return fn
+
+
+def lower_mo_hlt_spmd(params: HEParams, mesh, rules, d: int = 127,
+                      ctb: Optional[int] = None, unroll: int = 1):
+    """Lower the SPMD MO-HLT for the dry-run (ShapeDtypeStructs only)."""
+    if ctb is None:
+        ctb = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                           if a in ("pod", "data")]))
+    tabs = build_tables(params, d, ctb)
+    fn = make_mo_hlt_fn(tabs, rules, unroll=unroll)
+    L, N, M = params.L, params.N, len(tabs.full)
+    nb = len(tabs.digits)
+    u32 = jnp.uint32
+    sds = jax.ShapeDtypeStruct
+    args = (sds((ctb, L + 1, N), u32), sds((ctb, L + 1, N), u32),
+            sds((d, M, N), u32), sds((d, nb, M, N), u32),
+            sds((d, nb, M, N), u32))
+    from repro.distributed.sharding import sanitize_spec
+
+    def sh(axes, shape):
+        return rules.sharding(*sanitize_spec(rules, axes, shape))
+    in_sh = tuple(sh(ax, a.shape) for ax, a in zip(
+        [("ct_batch", "limbs", None), ("ct_batch", "limbs", None),
+         (None, "limbs", None), (None, None, "limbs", None),
+         (None, None, "limbs", None)], args))
+    out_shape = (ctb, L, N)
+    out_sh = (sh(("ct_batch", "limbs", None), out_shape),) * 2
+    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)

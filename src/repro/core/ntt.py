@@ -1,0 +1,104 @@
+"""Negacyclic NTT / iNTT over RNS limbs (vectorized, limb-batched).
+
+Longa–Naehrig iterative formulation: forward NTT is Cooley–Tukey
+decimation-in-time taking natural-order input to *bit-reversed* evaluation
+order; inverse is Gentleman–Sande taking bit-reversed back to natural. All
+evaluation-domain data in this codebase lives in bit-reversed order; pointwise
+products and automorphism tables are consistent with that convention
+(verified numerically in tests/test_ntt.py).
+
+The stage loop is a Python loop over log2(N) reshape/butterfly steps — under
+jit this unrolls into a fixed dataflow graph, which is exactly what the Pallas
+kernel mirrors with VMEM-resident stages (kernels/ntt.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import modmath as mm
+
+
+def _as3(q):
+    """(M,1) modulus column -> (M,1,1) for (…,M,m,t)-shaped butterfly views."""
+    return q[..., None]
+
+
+def ntt(x, psi_brv, q):
+    """Forward negacyclic NTT.
+
+    x: (..., M, N) uint32, natural order coefficients.
+    psi_brv: (M, N) uint32 table ψ^br(i).
+    q: (M, 1) uint64 moduli.
+    Returns (..., M, N) in bit-reversed evaluation order.
+    """
+    N = x.shape[-1]
+    m, t = 1, N
+    q3 = _as3(q)
+    while m < N:
+        t //= 2
+        xv = x.reshape(x.shape[:-1] + (m, 2, t))
+        s = psi_brv[..., m:2 * m][..., None]          # (M, m, 1)
+        u = xv[..., 0, :]
+        v = mm.mulmod(xv[..., 1, :], s, q3)
+        x = jnp.stack([mm.addmod(u, v, q3), mm.submod(u, v, q3)], axis=-2)
+        x = x.reshape(x.shape[:-3] + (N,))
+        m *= 2
+    return x
+
+
+def intt(x, psi_inv_brv, n_inv, q):
+    """Inverse negacyclic NTT: bit-reversed eval order -> natural coeffs."""
+    N = x.shape[-1]
+    q3 = _as3(q)
+    h, t = N // 2, 1
+    while h >= 1:
+        xv = x.reshape(x.shape[:-1] + (h, 2, t))
+        s = psi_inv_brv[..., h:2 * h][..., None]
+        u = xv[..., 0, :]
+        v = xv[..., 1, :]
+        x = jnp.stack(
+            [mm.addmod(u, v, q3), mm.mulmod(mm.submod(u, v, q3), s, q3)],
+            axis=-2,
+        )
+        x = x.reshape(x.shape[:-3] + (N,))
+        t *= 2
+        h //= 2
+    return mm.mulmod(x, n_inv, q)
+
+
+def ntt_mont(x, psi_brv_mont, q32, qneg_inv):
+    """Forward NTT on the u32 Montgomery datapath (twiddles pre-Montgomeryized,
+    data stays in the standard domain throughout). Oracle for kernels/ntt.py."""
+    N = x.shape[-1]
+    m, t = 1, N
+    q3, qi3 = _as3(q32), _as3(qneg_inv)
+    while m < N:
+        t //= 2
+        xv = x.reshape(x.shape[:-1] + (m, 2, t))
+        s = psi_brv_mont[..., m:2 * m][..., None]
+        u = xv[..., 0, :]
+        v = mm.montmul(xv[..., 1, :], s, q3, qi3)
+        x = jnp.stack([mm.montadd(u, v, q3), mm.montsub(u, v, q3)], axis=-2)
+        x = x.reshape(x.shape[:-3] + (N,))
+        m *= 2
+    return x
+
+
+def intt_mont(x, psi_inv_brv_mont, n_inv_mont, q32, qneg_inv):
+    N = x.shape[-1]
+    q3, qi3 = _as3(q32), _as3(qneg_inv)
+    h, t = N // 2, 1
+    while h >= 1:
+        xv = x.reshape(x.shape[:-1] + (h, 2, t))
+        s = psi_inv_brv_mont[..., h:2 * h][..., None]
+        u = xv[..., 0, :]
+        v = xv[..., 1, :]
+        x = jnp.stack(
+            [mm.montadd(u, v, q3),
+             mm.montmul(mm.montsub(u, v, q3), s, q3, qi3)],
+            axis=-2,
+        )
+        x = x.reshape(x.shape[:-3] + (N,))
+        t *= 2
+        h //= 2
+    return mm.montmul(x, n_inv_mont, q32, qneg_inv)

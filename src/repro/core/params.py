@@ -1,0 +1,289 @@
+"""HE parameter sets (paper Table II) and precomputed prime/NTT contexts.
+
+Word-size adaptation (see DESIGN.md §3): the paper uses 54-bit RNS primes
+(FPGA DSP tiles); the TPU datapath is u32, so runtime contexts use primes
+< 2^30. The (N, L, k, β) structure — which determines limb counts, digit
+decomposition, rotation counts and therefore the entire datapath — is kept
+identical to the paper. ``logq_paper`` is retained on each set so the cost
+model (core/costmodel.py) can reproduce the paper's §III-B3 byte counts
+exactly, while the runtime uses the 30-bit primes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import modmath as mm
+
+
+@dataclasses.dataclass(frozen=True)
+class HEParams:
+    """CKKS parameter set. L+1 main limbs q_0..q_L, k special limbs p_0..p_{k-1}."""
+
+    name: str
+    logN: int
+    L: int
+    k: int
+    beta: int
+    scale_bits: int = 28     # size of rescaling primes q_1..q_L (and the scale Δ)
+    q0_bits: int = 29        # size of the base prime q_0
+    sp_bits: int = 30        # size of the special primes p_i
+    logq_paper: float = 54.0  # per-limb bits in the paper's FPGA datapath (cost model)
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def N(self) -> int:
+        return 1 << self.logN
+
+    @property
+    def two_n(self) -> int:
+        return 2 << self.logN
+
+    @property
+    def slots(self) -> int:
+        return self.N // 2
+
+    @property
+    def num_main(self) -> int:
+        return self.L + 1
+
+    @property
+    def num_special(self) -> int:
+        return self.k
+
+    @property
+    def num_total(self) -> int:
+        return self.L + 1 + self.k
+
+    @property
+    def alpha(self) -> int:
+        """Limbs per digit (paper: α = (L+1)/β, generalized to ceil for Set-C)."""
+        return math.ceil((self.L + 1) / self.beta)
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.scale_bits)
+
+    def digits_at_level(self, ell: int) -> list[tuple[int, int]]:
+        """Digit decomposition [start, end) limb ranges for a level-ell Ct."""
+        nl = ell + 1
+        out = []
+        s = 0
+        while s < nl:
+            e = min(s + self.alpha, nl)
+            out.append((s, e))
+            s = e
+        return out
+
+    def num_digits_at_level(self, ell: int) -> int:
+        return math.ceil((ell + 1) / self.alpha)
+
+    def logQ(self) -> float:
+        """Runtime log2(Q_L) with the 30-bit prime configuration."""
+        return self.q0_bits + self.L * self.scale_bits
+
+    def logP(self) -> float:
+        return self.k * self.sp_bits
+
+    def keyswitch_noise_sane(self) -> bool:
+        """True iff log P >= max digit log D_j, i.e. hybrid-KS noise stays ~N·e.
+
+        The paper's Set-A (α=5, k=1) violates this as printed; we use it for
+        the cost model / dry-run and run a dnum=L+1 variant at runtime
+        (DESIGN.md §3). Set-B/C satisfy it.
+        """
+        logD = self.q0_bits + (self.alpha - 1) * self.scale_bits
+        return self.logP() >= logD
+
+    def runtime_variant(self) -> "HEParams":
+        """Noise-sane runtime twin: same (N, L, k), per-limb digits (α=1)."""
+        if self.keyswitch_noise_sane():
+            return self
+        return dataclasses.replace(self, name=self.name + "-rt", beta=self.L + 1)
+
+    def validate(self) -> None:
+        assert self.L >= 1 and self.k >= 1 and self.beta >= 1
+        assert self.beta <= self.L + 1
+
+
+# --- paper Table II -------------------------------------------------------
+# λ (security) only increases under the word-size adaptation: same N, smaller Q.
+SET_A = HEParams("Set-A", logN=13, L=4, k=1, beta=1, logq_paper=218 / 5)
+SET_B = HEParams("Set-B", logN=15, L=15, k=8, beta=2, logq_paper=855 / 16)
+SET_C = HEParams("Set-C", logN=16, L=31, k=12, beta=3, logq_paper=1693 / 32)
+
+PAPER_SETS = {"set-a": SET_A, "set-b": SET_B, "set-c": SET_C}
+
+
+def toy_params(logN: int = 6, L: int = 4, k: int = 2, beta: int = 2,
+               scale_bits: int = 26, name: str = "toy") -> HEParams:
+    """Small runnable parameter set for CPU tests (structure-faithful)."""
+    return HEParams(name, logN=logN, L=L, k=k, beta=beta,
+                    scale_bits=scale_bits, q0_bits=29, sp_bits=30)
+
+
+# ---------------------------------------------------------------------------
+# PrimeContext: all device-resident constant tables for a parameter set
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimeContext:
+    """Precomputed tables. Prime order: [q_0 .. q_L, p_0 .. p_{k-1}]."""
+
+    params: HEParams
+    moduli_host: tuple[int, ...]          # python ints, len M = L+1+k
+    moduli: jnp.ndarray                   # (M, 1) u64 — broadcasts over N
+    moduli_u32: jnp.ndarray               # (M, 1) u32
+    qneg_inv: jnp.ndarray                 # (M, 1) u32  (-q^-1 mod 2^32)
+    r2: jnp.ndarray                       # (M, 1) u32  (R^2 mod q)
+    psi_brv: jnp.ndarray                  # (M, N) u32  ψ^br(i), standard domain
+    psi_inv_brv: jnp.ndarray              # (M, N) u32
+    psi_brv_mont: jnp.ndarray             # (M, N) u32, Montgomery domain
+    psi_inv_brv_mont: jnp.ndarray         # (M, N) u32
+    n_inv: jnp.ndarray                    # (M, 1) u32  N^-1 mod q
+    rot_group: np.ndarray                 # (slots,) int64: 5^j mod 2N (encoding)
+
+    @property
+    def main(self) -> tuple[int, ...]:
+        return self.moduli_host[: self.params.num_main]
+
+    @property
+    def special(self) -> tuple[int, ...]:
+        return self.moduli_host[self.params.num_main:]
+
+    def slc(self, idx) -> "BasisView":
+        """View of the tables restricted to prime indices `idx` (list/array)."""
+        idx = np.asarray(idx, dtype=np.int64)
+        return BasisView(self, idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class BasisView:
+    """Per-basis slices of a PrimeContext (a ciphertext's current moduli)."""
+
+    ctx: PrimeContext
+    idx: np.ndarray
+
+    @functools.cached_property
+    def moduli_host(self) -> tuple[int, ...]:
+        return tuple(self.ctx.moduli_host[i] for i in self.idx)
+
+    @property
+    def moduli(self):
+        return self.ctx.moduli[self.idx]
+
+    @property
+    def moduli_u32(self):
+        return self.ctx.moduli_u32[self.idx]
+
+    @property
+    def qneg_inv(self):
+        return self.ctx.qneg_inv[self.idx]
+
+    @property
+    def r2(self):
+        return self.ctx.r2[self.idx]
+
+    @property
+    def psi_brv(self):
+        return self.ctx.psi_brv[self.idx]
+
+    @property
+    def psi_inv_brv(self):
+        return self.ctx.psi_inv_brv[self.idx]
+
+    @property
+    def psi_brv_mont(self):
+        return self.ctx.psi_brv_mont[self.idx]
+
+    @property
+    def psi_inv_brv_mont(self):
+        return self.ctx.psi_inv_brv_mont[self.idx]
+
+    @property
+    def n_inv(self):
+        return self.ctx.n_inv[self.idx]
+
+    def __len__(self) -> int:
+        return len(self.idx)
+
+
+def _build_tables_for_prime(q: int, N: int, rng: np.random.Generator):
+    two_n = 2 * N
+    psi = mm.find_primitive_root(q, two_n, rng)
+    psi_inv = mm.host_inv(psi, q)
+    brv = mm.bit_reverse_indices(N)
+    # ψ^br(i) tables (Longa–Naehrig layout: stage m uses entries [m, 2m)).
+    pw = np.empty(N, dtype=np.uint64)
+    pwi = np.empty(N, dtype=np.uint64)
+    cur = 1
+    curi = 1
+    tmp = np.empty(N, dtype=np.uint64)
+    tmpi = np.empty(N, dtype=np.uint64)
+    for i in range(N):
+        tmp[i] = cur
+        tmpi[i] = curi
+        cur = cur * psi % q
+        curi = curi * psi_inv % q
+    pw = tmp[brv]
+    pwi = tmpi[brv]
+    n_inv = mm.host_inv(N, q)
+    return pw.astype(np.uint32), pwi.astype(np.uint32), np.uint32(n_inv)
+
+
+@functools.lru_cache(maxsize=None)
+def get_context(params: HEParams) -> PrimeContext:
+    params.validate()
+    N, two_n = params.N, params.two_n
+    rng = np.random.default_rng(0xFA3E)
+
+    specials = mm.gen_ntt_primes(params.k, params.sp_bits, two_n)
+    skip = frozenset(specials)
+    q0 = mm.gen_ntt_primes(1, params.q0_bits, two_n, skip=skip)
+    skip = skip | frozenset(q0)
+    scales = mm.gen_ntt_primes(params.L, params.scale_bits, two_n, skip=skip)
+    moduli = tuple(q0 + scales + specials)
+    assert len(set(moduli)) == len(moduli)
+
+    M = len(moduli)
+    psi = np.empty((M, N), dtype=np.uint32)
+    psii = np.empty((M, N), dtype=np.uint32)
+    ninv = np.empty((M,), dtype=np.uint32)
+    qneg = np.empty((M,), dtype=np.uint32)
+    r2 = np.empty((M,), dtype=np.uint32)
+    psi_m = np.empty((M, N), dtype=np.uint32)
+    psii_m = np.empty((M, N), dtype=np.uint32)
+    for i, q in enumerate(moduli):
+        psi[i], psii[i], ninv[i] = _build_tables_for_prime(q, N, rng)
+        qn, rr2 = mm.mont_constants(q)
+        qneg[i], r2[i] = np.uint32(qn), np.uint32(rr2)
+        # Montgomery-domain twiddles: tw * R mod q
+        psi_m[i] = ((psi[i].astype(np.uint64) << np.uint64(32)) % np.uint64(q)).astype(np.uint32)
+        psii_m[i] = ((psii[i].astype(np.uint64) << np.uint64(32)) % np.uint64(q)).astype(np.uint32)
+
+    rot_group = np.empty(params.slots, dtype=np.int64)
+    g = 1
+    for j in range(params.slots):
+        rot_group[j] = g
+        g = (g * 5) % two_n
+
+    col = lambda a: jnp.asarray(a)[:, None]
+    return PrimeContext(
+        params=params,
+        moduli_host=moduli,
+        moduli=col(np.asarray(moduli, dtype=np.uint64)),
+        moduli_u32=col(np.asarray(moduli, dtype=np.uint32)),
+        qneg_inv=col(qneg),
+        r2=col(r2),
+        psi_brv=jnp.asarray(psi),
+        psi_inv_brv=jnp.asarray(psii),
+        psi_brv_mont=jnp.asarray(psi_m),
+        psi_inv_brv_mont=jnp.asarray(psii_m),
+        n_inv=col(ninv),
+        rot_group=rot_group,
+    )

@@ -1,0 +1,126 @@
+"""RNS basis management: BaseConv (HPS fast base conversion with floating-point
+correction), ModUp, ModDown, Rescale.
+
+BaseConv is the only sub-operation that couples limbs (everything else in the
+HLT datapath is limb-local) — on the FPGA it is the unfused stage that incurs
+off-chip traffic; in the distributed TPU mapping it is the only stage that
+requires a cross-device collective when limbs are sharded (DESIGN.md §3).
+
+All polynomials here are in the COEFFICIENT domain (BaseConv cannot be done in
+eval domain — paper §II-B3), shape (|S|, N) uint32.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import modmath as mm
+from repro.core.params import PrimeContext
+
+
+class RnsTools:
+    """Per-context cache of base-conversion / rescale / moddown tables.
+
+    Basis arguments S, T are tuples of *global prime indices* into
+    ctx.moduli_host ([q_0..q_L, p_0..p_{k-1}]).
+    """
+
+    def __init__(self, ctx: PrimeContext):
+        self.ctx = ctx
+        self._bc_cache: dict = {}
+        self._scale_cache: dict = {}
+
+    # -- BaseConv ----------------------------------------------------------
+
+    def _bc_tables(self, S: tuple, T: tuple):
+        key = (S, T)
+        if key not in self._bc_cache:
+            qs = [self.ctx.moduli_host[i] for i in S]
+            qt = [self.ctx.moduli_host[i] for i in T]
+            D = 1
+            for q in qs:
+                D *= q
+            hat = [D // q for q in qs]
+            hat_inv = np.array([mm.host_inv(h % q, q) for h, q in zip(hat, qs)],
+                               dtype=np.uint32)[:, None]
+            W = np.array([[h % t for t in qt] for h in hat],
+                         dtype=np.uint64).T          # (|T|, |S|)
+            D_mod_t = np.array([D % t for t in qt], dtype=np.uint64)[:, None]
+            inv_d = np.array([1.0 / q for q in qs])[:, None]  # (|S|, 1) float64
+            # cache NUMPY arrays: jnp constants created inside a jit trace are
+            # tracers and must not outlive it (converted afresh at each use).
+            self._bc_cache[key] = (hat_inv, W, D_mod_t, inv_d)
+        return self._bc_cache[key]
+
+    def base_conv(self, x, S: tuple, T: tuple):
+        """Exact base conversion of the [0, D) representative.
+
+        x: (|S|, N) u32 residues over S. Returns (|T|, N) u32 residues over T.
+        """
+        hat_inv, W, D_mod_t, inv_d = self._bc_tables(S, T)
+        qs = self.ctx.moduli[np.asarray(S)]
+        qt = self.ctx.moduli[np.asarray(T)]
+        y = mm.mulmod(x, hat_inv, qs)                        # (|S|, N)
+        # v = floor(sum_i y_i / d_i): exact integer overflow count (HPS).
+        v = jnp.floor(jnp.sum(y.astype(jnp.float64) * inv_d, axis=0) + 1e-9)
+        v = v.astype(jnp.uint64)                             # (N,)
+        # out_t = (sum_i y_i * W_ti mod t - v * D mod t) mod t
+        prod = (y[None].astype(jnp.uint64) * W[:, :, None]) % qt[:, None]
+        acc = jnp.sum(prod, axis=1) % qt                     # (|T|, N) < 2^30·|S|
+        corr = (v[None, :] * D_mod_t) % qt
+        out = (acc + qt - corr) % qt
+        return out.astype(jnp.uint32)
+
+    # -- ModUp -------------------------------------------------------------
+
+    def mod_up(self, digit_coeff, S: tuple, T_new: tuple):
+        """Raise a digit (coeff domain) from basis S to S ∪ T_new: returns the
+        *generated* limbs over T_new only (caller keeps the originals)."""
+        return self.base_conv(digit_coeff, S, T_new)
+
+    # -- ModDown / Rescale -------------------------------------------------
+
+    def _moddown_tables(self, P: tuple, Q: tuple):
+        key = ("md", P, Q)
+        if key not in self._scale_cache:
+            ps = [self.ctx.moduli_host[i] for i in P]
+            qs = [self.ctx.moduli_host[i] for i in Q]
+            Pprod = 1
+            for p in ps:
+                Pprod *= p
+            p_inv = np.array([mm.host_inv(Pprod % q, q) for q in qs],
+                             dtype=np.uint32)[:, None]
+            self._scale_cache[key] = p_inv          # numpy (trace-safe cache)
+        return self._scale_cache[key]
+
+    def mod_down(self, x_q, x_p, P: tuple, Q: tuple):
+        """(x - [x]_P)/P: x_q (|Q|, N) and x_p (|P|, N) coeff domain residues."""
+        conv = self.base_conv(x_p, P, Q)                    # [x]_P over Q
+        p_inv = self._moddown_tables(P, Q)
+        qs = self.ctx.moduli[np.asarray(Q)]
+        return mm.mulmod(mm.submod(x_q, conv, qs), p_inv, qs)
+
+    def rescale(self, x, ell: int):
+        """Drop limb q_ell: x (ell+1, N) coeff -> (ell, N). Special case of
+        ModDown with P = {q_ell} (paper merges this into ModDown — core/hlt.py)."""
+        Q = tuple(range(ell))
+        return self.mod_down(x[:ell], x[ell:ell + 1], (ell,), Q)
+
+    # -- digit split -------------------------------------------------------
+
+    def digit_bases(self, ell: int):
+        """[(digit_prime_indices, generated_prime_indices)] at level ell.
+
+        Generated = (Q_ell ∪ P) minus the digit's own primes; the keyswitch
+        target basis is digit ∪ generated ordered as [Q_ell..., P...].
+        """
+        p = self.ctx.params
+        full = tuple(range(ell + 1)) + tuple(range(p.num_main, p.num_total))
+        out = []
+        for (s, e) in p.digits_at_level(ell):
+            own = tuple(range(s, e))
+            gen = tuple(i for i in full if not (s <= i < e))
+            out.append((own, gen, full))
+        return out

@@ -1,0 +1,94 @@
+"""Synthetic sharded token pipeline with background host prefetch.
+
+Deterministic per (seed, host, step): every host generates only its shard of
+the global batch — the multi-host pattern real data loaders follow — and an
+elastic remap lets a restarted job with a different host count resume from
+the same global sample stream (fault tolerance: checkpoint stores `step`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    global_batch: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    num_hosts: int = 1
+    host_id: int = 0
+    prefetch: int = 2
+    kind: str = "lm"          # lm | audio (embeds) | vlm (tokens+frontend)
+
+
+def _host_slice(dcfg: DataConfig):
+    per = dcfg.global_batch // dcfg.num_hosts
+    return dcfg.host_id * per, per
+
+
+def synth_batch(cfg: ModelConfig, dcfg: DataConfig, step: int) -> dict:
+    """Markov-ish synthetic tokens (not uniform noise: loss can decrease)."""
+    start, per = _host_slice(dcfg)
+    out = {}
+    toks = np.empty((per, dcfg.seq_len + 1), np.int32)
+    for b in range(per):
+        rng = np.random.default_rng(
+            (dcfg.seed, step, start + b))          # sample-keyed: elastic-safe
+        state = rng.integers(0, cfg.vocab_size)
+        stride = 1 + (start + b) % 17
+        seq = (state + stride * np.arange(dcfg.seq_len + 1)
+               + rng.integers(0, 3, dcfg.seq_len + 1)) % cfg.vocab_size
+        toks[b] = seq
+    out["targets"] = toks[:, 1:]
+    if cfg.family == "audio":
+        rngf = np.random.default_rng((dcfg.seed, step, 10 ** 6))
+        out["embeds"] = rngf.normal(
+            size=(per, dcfg.seq_len, cfg.d_model)).astype(np.float32)
+    else:
+        out["tokens"] = toks[:, :-1]
+    if cfg.family == "vlm":
+        rngf = np.random.default_rng((dcfg.seed, step, 10 ** 6 + 1))
+        out["frontend"] = rngf.normal(
+            size=(per, cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model)
+        ).astype(np.float32)
+    return out
+
+
+class PrefetchLoader:
+    """Background-thread prefetch of synth batches (host-side pipelining)."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig, start_step: int = 0):
+        self.cfg, self.dcfg = cfg, dcfg
+        self._q: queue.Queue = queue.Queue(maxsize=dcfg.prefetch)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = synth_batch(self.cfg, self.dcfg, step)
+            self._q.put((step, batch))
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

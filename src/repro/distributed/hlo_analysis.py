@@ -1,0 +1,96 @@
+"""Roofline-term extraction from compiled HLO.
+
+collective_bytes is NOT in cost_analysis(): we parse the optimized HLO text
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (async *-start variants counted once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_op: dict
+    count: int
+    largest: list       # [(bytes, op, line_prefix)]
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    by_op: dict = defaultdict(int)
+    count = 0
+    largest: list = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+                      r"([a-z\-]+)(?:-start)?\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in COLLECTIVE_OPS:
+            continue
+        # operand shapes: types inside the call parens; fall back to the
+        # output shape(s) on the left of '='.
+        lhs, _, rhs = s.partition("=")
+        inner = rhs[rhs.index("("):] if "(" in rhs else rhs
+        shapes = _SHAPE_RE.findall(inner)
+        if not shapes:
+            shapes = _SHAPE_RE.findall(lhs)
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes
+                     if dt in _DTYPE_BYTES)
+        by_op[op] += nbytes
+        count += 1
+        largest.append((nbytes, op, s[:110]))
+    largest.sort(reverse=True)
+    return CollectiveStats(total_bytes=sum(by_op.values()), by_op=dict(by_op),
+                           count=count, largest=largest[:12])
+
+
+# --- hardware model (TPU v5e targets; DESIGN.md §3) -------------------------
+
+HW = {
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw": 50e9,                # bytes/s per link (~per direction)
+    "vpu_u32_ops": 4e12,           # u32 VPU lane ops/s (8×128×~4GHz×... est.)
+}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int, peak_flops: float = HW["peak_flops_bf16"]):
+    """Per-chip roofline terms in seconds (totals divided across chips)."""
+    return {
+        "compute_s": flops / (chips * peak_flops),
+        "memory_s": hbm_bytes / (chips * HW["hbm_bw"]),
+        "collective_s": coll_bytes / (chips * HW["ici_bw"]),
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])

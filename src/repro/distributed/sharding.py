@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules (GSPMD/pjit), MaxText-style.
+
+Models annotate activations/params with *logical* axis names; a ShardingRules
+table maps them to physical mesh axes. The production mesh is
+(pod, data, model) — DP over pod×data, TP/EP over model, SP optional for long
+sequences (sequence sharded over 'model' during prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# default logical -> physical mapping; None = replicated
+DEFAULT_RULES: dict[str, Optional[tuple]] = {
+    "batch": ("pod", "data"),      # data parallel over pod+data
+    "seq": None,                   # sequence replicated by default
+    "seq_sp": ("model",),          # sequence-parallel variant (long context)
+    "d_model": None,
+    "heads": ("model",),           # TP: attention heads
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ff": ("model",),              # TP: MLP hidden
+    "experts": ("model",),         # EP: experts over model axis
+    "expert_cap": None,
+    "vocab": ("model",),           # TP: embedding/logits
+    "layers": None,                # scan axis
+    "fsdp": ("data",),             # ZeRO-3 style param shard over data
+    # HE MM axes
+    "limbs": ("model",),           # RNS limb-parallel (DESIGN.md §3)
+    "ct_batch": ("pod", "data"),   # independent ciphertexts / matrix blocks
+    "coeff": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    rules: dict
+    mesh: Optional[Mesh] = None
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """Map logical axis names to a PartitionSpec (None entries replicate)."""
+        phys = []
+        used = set()
+        for name in logical:
+            if name is None:
+                phys.append(None)
+                continue
+            axes = self.rules.get(name)
+            if axes is None:
+                phys.append(None)
+                continue
+            avail = tuple(a for a in axes
+                          if a not in used and self._axis_in_mesh(a))
+            used.update(avail)
+            if not avail:
+                phys.append(None)
+            elif len(avail) == 1:
+                phys.append(avail[0])
+            else:
+                phys.append(avail)
+        return P(*phys)
+
+    def _axis_in_mesh(self, axis: str) -> bool:
+        return self.mesh is None or axis in self.mesh.axis_names
+
+    def sharding(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x, *logical):
+        """with_sharding_constraint if a mesh is active; no-op otherwise.
+
+        Axes that do not divide the corresponding dimension are dropped
+        (replicated): constraining e.g. 8 kv-heads over a 16-way model axis
+        otherwise makes GSPMD insert involuntary full-rematerialization
+        copies on every layer (§Perf iteration 1)."""
+        if self.mesh is None:
+            return x
+        spec = tuple(
+            ax if ax is None or dim % logical_axis_size(self, ax) == 0
+            else None
+            for ax, dim in zip(logical, x.shape))
+        return jax.lax.with_sharding_constraint(x, self.sharding(*spec))
+
+
+def logical_axis_size(rules: "ShardingRules", ax: Optional[str]) -> int:
+    """Product of mesh-axis sizes a logical axis maps to (1 if unmapped)."""
+    if ax is None or rules.mesh is None:
+        return 1
+    phys = rules.rules.get(ax)
+    if not phys:
+        return 1
+    total = 1
+    for a in phys:
+        if a in rules.mesh.shape:
+            total *= rules.mesh.shape[a]
+    return total
+
+
+def sanitize_spec(rules: "ShardingRules", axes, shape) -> tuple:
+    """Drop logical axes that don't divide their dimension (replicate them)."""
+    return tuple(ax if ax and dim % logical_axis_size(rules, ax) == 0 else None
+                 for ax, dim in zip(axes, shape))
+
+
+def make_rules(mesh: Optional[Mesh] = None, overrides: Optional[dict] = None,
+               ) -> ShardingRules:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return ShardingRules(rules=rules, mesh=mesh)
+
+
+# A process-global "current rules" so model code stays uncluttered. The
+# launcher installs mesh-bound rules; tests/smoke runs use the no-mesh default.
+_CURRENT = make_rules()
+
+
+def set_rules(rules: ShardingRules) -> None:
+    global _CURRENT
+    _CURRENT = rules
+
+
+def get_rules() -> ShardingRules:
+    return _CURRENT
+
+
+def shard(x, *logical):
+    return _CURRENT.constrain(x, *logical)

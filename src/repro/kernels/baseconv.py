@@ -1,0 +1,60 @@
+"""RNS BaseConv — Pallas TPU kernel.
+
+The one limb-coupling sub-operation (ModUp/ModDown). Grid: (|T|, N // block).
+Each step loads ALL source limbs for one coefficient tile (|S| ≤ ~44 rows —
+a (|S|, block) VMEM tile), the per-target W column, and emits one target
+limb tile. The f32 overflow-correction term v is computed in-tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import modmath as mm
+
+DEFAULT_BLOCK = 2048
+
+
+def _baseconv_kernel(x_ref, hatinv_ref, qown_ref, qnegown_ref, w_ref,
+                     dmod_ref, invd_ref, qgen_ref, qneggen_ref, o_ref, *,
+                     ns: int):
+    x = x_ref[...]                                # (|S|, blk)
+    q_own = qown_ref[...]                         # (|S|, 1)
+    y = mm.montmul(x, hatinv_ref[...], q_own, qnegown_ref[...])
+    v = jnp.floor(jnp.sum(y.astype(jnp.float32) * invd_ref[...].astype(
+        jnp.float32), axis=0, keepdims=True) + 0.5e-6).astype(jnp.uint32)
+    qg = qgen_ref[...]                            # (1, 1)
+    qneg = qneggen_ref[...]
+    acc = jnp.zeros_like(y[:1])
+    for i in range(ns):                           # modular MAC over src limbs
+        acc = mm.montadd(acc, mm.montmul(y[i:i + 1], w_ref[0, i:i + 1],
+                                         qg, qneg), qg)
+    corr = mm.montmul(v, dmod_ref[...], qg, qneg)
+    o_ref[...] = mm.montsub(acc, corr, qg)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def baseconv(x, hat_inv_m, q_own, qneg_own, W_m, D_mod_m, inv_d, q_gen,
+             qneg_gen, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """x: (|S|, N); hat_inv_m/q_own/qneg_own: (|S|, 1);
+    W_m: (|T|, |S|) mont; D_mod_m/q_gen/qneg_gen: (|T|, 1); inv_d: (|S|, 1)
+    float. Returns (|T|, N) u32 residues over the target basis."""
+    ns, N = x.shape
+    nt = W_m.shape[0]
+    block = min(block, N)
+    src = pl.BlockSpec((ns, block), lambda t, j: (0, j))
+    scol = pl.BlockSpec((ns, 1), lambda t, j: (0, 0))
+    wrow = pl.BlockSpec((1, ns), lambda t, j: (t, 0))
+    tcol = pl.BlockSpec((1, 1), lambda t, j: (t, 0))
+    out = pl.BlockSpec((1, block), lambda t, j: (t, j))
+    return pl.pallas_call(
+        functools.partial(_baseconv_kernel, ns=ns),
+        grid=(nt, N // block),
+        in_specs=[src, scol, scol, scol, wrow, tcol, scol, tcol, tcol],
+        out_specs=out,
+        out_shape=jax.ShapeDtypeStruct((nt, N), jnp.uint32),
+        interpret=interpret,
+    )(x, hat_inv_m, q_own, qneg_own, W_m, D_mod_m, inv_d, q_gen, qneg_gen)

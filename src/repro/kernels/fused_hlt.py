@@ -1,0 +1,94 @@
+"""Fused MO-HLT inner datapath — the paper's key kernel, as Pallas TPU.
+
+One grid step = one (limb × rotation-chunk) tile of the limb-outer /
+rotation-inner loop (Fig. 2(B)): the limb's digit rows stay resident in VMEM
+while a chunk of rotations flows through Automorph (VMEM gather) → KeyIP
+(β Montgomery MACs against the rot-key rows) → DiagIP (× plaintext diagonal,
+accumulate). The output block is revisited across the rotation grid dimension
+(TPU grid is sequential) — initialized at rot-step 0, accumulated after —
+so the accumulator never leaves VMEM: the Eq. 24 working set, (β+1) limb rows
+plus the tile of per-rotation operands.
+
+VMEM budget per grid step (N=2^16, β=3, chunk=8):
+  digits 3·256K + rk 2·8·3·256K + u 8·256K + perms 8·256K + acc 2·256K ≈ 17 MB.
+Chunk is chosen from the cost model so this fits the per-core VMEM budget
+(configs/fame_sets.py scratchpad analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import modmath as mm
+
+
+def _fused_kernel(dig_ref, c0e_ref, c1e_ref, u_ref, rk0_ref, rk1_ref,
+                  perm_ref, q_ref, qneg_ref, id_ref, a0_ref, a1_ref, *,
+                  nbeta: int, chunk: int):
+    rblk = pl.program_id(1)
+    q = q_ref[0, 0]
+    qneg = qneg_ref[0, 0]
+    dig = dig_ref[:, 0, :]                       # (β, N) resident
+    c0e = c0e_ref[0, :]
+    c1e = c1e_ref[0, :]
+
+    @pl.when(rblk == 0)
+    def _init():
+        a0_ref[0, :] = jnp.zeros_like(c0e)
+        a1_ref[0, :] = jnp.zeros_like(c1e)
+
+    a0 = a0_ref[0, :]
+    a1 = a1_ref[0, :]
+    for r in range(chunk):                       # rotation-inner loop
+        pm = perm_ref[r, :]
+        dig_rot = jnp.take(dig, pm, axis=-1)     # Automorph (VMEM gather)
+        c0r = jnp.take(c0e, pm, axis=-1)
+        k0 = jnp.zeros_like(c0e)
+        k1 = jnp.zeros_like(c1e)
+        for j in range(nbeta):                   # KeyIP
+            k0 = mm.montadd(k0, mm.montmul(dig_rot[j], rk0_ref[r, j, 0, :],
+                                           q, qneg), q)
+            k1 = mm.montadd(k1, mm.montmul(dig_rot[j], rk1_ref[r, j, 0, :],
+                                           q, qneg), q)
+        is_id = id_ref[r, 0] != 0                # z=0: bypass KeyIP
+        t0 = jnp.where(is_id, c0e, mm.montadd(k0, c0r, q))
+        t1 = jnp.where(is_id, c1e, k1)
+        u = u_ref[r, 0, :]
+        a0 = mm.montadd(a0, mm.montmul(u, t0, q, qneg), q)   # DiagIP
+        a1 = mm.montadd(a1, mm.montmul(u, t1, q, qneg), q)
+    a0_ref[0, :] = a0
+    a1_ref[0, :] = a1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def fused_hlt(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id, q32, qneg, *,
+              chunk: int = 8, interpret: bool = True):
+    """digits: (β, M, N); c0e/c1e: (M, N); u_mont: (d, M, N);
+    rk0/rk1: (d, β, M, N); perms: (d, N) i32; is_id: (d, 1) i32.
+    Returns (acc0, acc1): (M, N) accumulated DiagIP in the extended basis."""
+    nbeta, M, N = digits.shape
+    d = u_mont.shape[0]
+    chunk = min(chunk, d)
+    assert d % chunk == 0, (d, chunk)
+    grid = (M, d // chunk)
+    dig_s = pl.BlockSpec((nbeta, 1, N), lambda i, r: (0, i, 0))
+    vec_s = pl.BlockSpec((1, N), lambda i, r: (i, 0))
+    u_s = pl.BlockSpec((chunk, 1, N), lambda i, r: (r, i, 0))
+    rk_s = pl.BlockSpec((chunk, nbeta, 1, N), lambda i, r: (r, 0, i, 0))
+    pm_s = pl.BlockSpec((chunk, N), lambda i, r: (r, 0))
+    id_s = pl.BlockSpec((chunk, 1), lambda i, r: (r, 0))
+    c_s = pl.BlockSpec((1, 1), lambda i, r: (i, 0))
+    out_s = pl.BlockSpec((1, N), lambda i, r: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, nbeta=nbeta, chunk=chunk),
+        grid=grid,
+        in_specs=[dig_s, vec_s, vec_s, u_s, rk_s, rk_s, pm_s, c_s, c_s, id_s],
+        out_specs=[out_s, out_s],
+        out_shape=[jax.ShapeDtypeStruct((M, N), jnp.uint32),
+                   jax.ShapeDtypeStruct((M, N), jnp.uint32)],
+        interpret=interpret,
+    )(digits, c0e, c1e, u_mont, rk0, rk1, perms, q32, qneg, is_id)

@@ -1,0 +1,67 @@
+"""Element-wise modular multiply/add over RNS limbs — Pallas TPU kernel.
+
+Grid: (limbs, N // block). Per grid step the VMEM working set is one
+(1, block) tile of each operand plus the (1, 1) per-limb constants — the
+modular ALU array of the paper's PE, with dp = block lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import modmath as mm
+
+DEFAULT_BLOCK = 1024      # lanes per grid step (multiple of 128)
+
+
+def _modmul_kernel(x_ref, y_ref, q_ref, qneg_ref, o_ref):
+    x = x_ref[...]
+    y = y_ref[...]
+    q = q_ref[...]
+    qneg = qneg_ref[...]
+    o_ref[...] = mm.montmul(x, y, q, qneg)
+
+
+def _modadd_kernel(x_ref, y_ref, q_ref, o_ref):
+    o_ref[...] = mm.montadd(x_ref[...], y_ref[...], q_ref[...])
+
+
+def _specs(block):
+    data = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    const = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    return data, const
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def modmul(x, y, q32, qneg, *, block: int = DEFAULT_BLOCK,
+           interpret: bool = True):
+    """x, y: (M, N) u32; q32/qneg: (M, 1). Montgomery product per limb."""
+    M, N = x.shape
+    block = min(block, N)
+    data, const = _specs(block)
+    return pl.pallas_call(
+        _modmul_kernel,
+        grid=(M, N // block),
+        in_specs=[data, data, const, const],
+        out_specs=data,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.uint32),
+        interpret=interpret,
+    )(x, y, q32, qneg)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def modadd(x, y, q32, *, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    M, N = x.shape
+    block = min(block, N)
+    data, const = _specs(block)
+    return pl.pallas_call(
+        _modadd_kernel,
+        grid=(M, N // block),
+        in_specs=[data, data, const],
+        out_specs=data,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.uint32),
+        interpret=interpret,
+    )(x, y, q32)

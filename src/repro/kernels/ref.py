@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import modmath as mm, ntt as ntt_mod
+
+
+def modmul_ref(x, y, q32, qneg):
+    """Element-wise Montgomery product, limb-batched."""
+    return mm.montmul(x, y, q32, qneg)
+
+
+def modadd_ref(x, y, q32):
+    return mm.montadd(x, y, q32)
+
+
+def ntt_ref(x, psi_m, q32, qneg):
+    return ntt_mod.ntt_mont(x, psi_m, q32, qneg)
+
+
+def intt_ref(x, psii_m, ninv_m, q32, qneg):
+    return ntt_mod.intt_mont(x, psii_m, ninv_m, q32, qneg)
+
+
+def automorph_ref(x, perm):
+    return x[..., perm]
+
+
+def fused_hlt_ref(digits, c0e, c1e, u_mont, rk0, rk1, perms, q32, qneg,
+                  id_idx: int):
+    """Oracle for the fused Automorph→KeyIP→DiagIP kernel.
+
+    digits: (β, M, N); c0e/c1e: (M, N); u_mont: (d, M, N);
+    rk0/rk1: (d, β, M, N); perms: (d, N). Returns acc0, acc1 (M, N)."""
+    d, nb = rk0.shape[0], rk0.shape[1]
+    acc0 = jnp.zeros_like(c0e)
+    acc1 = jnp.zeros_like(c1e)
+    for t in range(d):
+        pm = perms[t]
+        dig_rot = digits[..., pm]
+        c0r = c0e[..., pm]
+        k0 = jnp.zeros_like(acc0)
+        k1 = jnp.zeros_like(acc1)
+        for j in range(nb):
+            k0 = mm.montadd(k0, mm.montmul(dig_rot[j], rk0[t, j], q32, qneg),
+                            q32)
+            k1 = mm.montadd(k1, mm.montmul(dig_rot[j], rk1[t, j], q32, qneg),
+                            q32)
+        if t == id_idx:
+            t0, t1 = c0e, c1e
+        else:
+            t0, t1 = mm.montadd(k0, c0r, q32), k1
+        acc0 = mm.montadd(acc0, mm.montmul(u_mont[t], t0, q32, qneg), q32)
+        acc1 = mm.montadd(acc1, mm.montmul(u_mont[t], t1, q32, qneg), q32)
+    return acc0, acc1
+
+
+def baseconv_ref(x, hat_inv_m, W_m, D_mod_m, inv_d, q_own, qneg_own, q_gen,
+                 qneg_gen):
+    """HPS base conversion oracle on the u32 Montgomery path (f64 correction).
+
+    x: (|S|, N); W_m: (|T|, |S|, 1). Returns (|T|, N)."""
+    y = mm.montmul(x, hat_inv_m, q_own, qneg_own)
+    v = jnp.floor(jnp.sum(y.astype(jnp.float64) * inv_d, axis=0) + 1e-9
+                  ).astype(jnp.uint32)
+    prod = mm.montmul(y[None], W_m, q_gen[:, None], qneg_gen[:, None])
+    acc = prod[:, 0]
+    for i in range(1, prod.shape[1]):
+        acc = mm.montadd(acc, prod[:, i], q_gen)
+    corr = mm.montmul(v[None], D_mod_m, q_gen, qneg_gen)
+    return mm.montsub(acc, corr, q_gen)

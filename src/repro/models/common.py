@@ -1,0 +1,300 @@
+"""Model zoo substrate: config, norms, RoPE, attention (blockwise/flash-style),
+MLP variants, embeddings. Pure JAX — params are pytrees of arrays, compatible
+with jax.eval_shape abstract init for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    vocab_size: int
+    num_kv_heads: int = 0          # 0 -> = num_heads (MHA)
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    conv_kernel: int = 4
+    ssm_chunk: int = 128
+    # hybrid (zamba2-style): one shared attention block every `attn_period`
+    # ssm layers; num_layers counts ssm layers + attn layers together.
+    attn_period: int = 0
+    # VLM: cross-attention to frontend embeddings every `cross_attn_period`
+    cross_attn_period: int = 0
+    frontend_tokens: int = 0       # stub modality input length
+    frontend_dim: int = 0
+    # attention / MLP details
+    qkv_bias: bool = False
+    mlp: str = "swiglu"            # swiglu | squared_relu | gelu
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    attn_block: int = 1024         # blockwise-attention KV tile
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # secure (paper integration): indices of layers whose projections run
+    # under HE MM in secure-inference mode (repro.secure)
+    secure_layers: tuple = ()
+
+    @property
+    def kv_heads(self) -> int:
+        return self.num_kv_heads or self.num_heads
+
+    @property
+    def hdim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used in MODEL_FLOPS and reports)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        h, kv, hd = self.num_heads, self.kv_heads, self.hdim
+        attn = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+        if self.mlp == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        if self.num_experts:
+            mlp = self.num_experts * mlp + d * self.num_experts
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            din = self.ssm_expand * d
+            nheads = din // self.ssm_head_dim
+            ssm = (d * (2 * din + 2 * self.ssm_state + nheads)
+                   + din * self.conv_kernel + din * d)
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            per_layer = ssm
+        elif self.family == "hybrid":
+            na = self.num_attn_layers()
+            ns = self.num_layers - na
+            return (ns * ssm + na * (attn + mlp) + emb)
+        else:
+            per_layer = attn + mlp
+        return self.num_layers * per_layer + emb
+
+    def num_attn_layers(self) -> int:
+        if self.family != "hybrid" or not self.attn_period:
+            return 0
+        return self.num_layers // self.attn_period
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (1.0 / np.sqrt(fan_in))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D). Rotary embedding over the last dim."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq       # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def decode_attention(q, k, v, kv_len):
+    """Sq=1 attention without the sequential KV scan: one masked softmax over
+    the full cache. Pure einsums + reductions — GSPMD parallelizes the KV
+    sequence axis across the mesh (flash-decoding style: per-shard partial
+    max/sum combined by all-reduce), so a seq-sharded cache divides the
+    per-chip HBM read by the seq shards (§Perf zamba2/long_500k iteration).
+
+    q: (B, 1, H, D); k, v: (B, Skv, KV, D); kv_len: valid prefix length."""
+    B, _, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = np.float32(1.0 / np.sqrt(D))
+    qg = q.reshape(B, 1, KV, g, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(Skv, dtype=jnp.int32)
+    s = jnp.where((kpos > kv_len)[None, None, None, None, :], -1e30, s)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset=0,
+                        block: int = 1024):
+    """Flash-style online-softmax attention, lax.scan over KV tiles.
+
+    Never materializes the (Sq, Skv) score matrix — the memory term in the
+    roofline stays linear in S. q: (B,Sq,H,D); k,v: (B,Skv,KV,D).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = np.float32(1.0 / np.sqrt(D))   # explicit f32: x64 flag is global
+    nblk = max(1, (Skv + block - 1) // block)
+    pad = nblk * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block, KV, D).swapaxes(0, 1)
+    vb = v.reshape(B, nblk, block, KV, D).swapaxes(0, 1)
+    qg = q.reshape(B, Sq, KV, g, D)
+    qpos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    # per-block key positions as scan xs: keeps the causal mask a cheap
+    # in-body comparison that fuses into the where — NOT a loop-invariant
+    # XLA hoists into a materialized (nblk, B, KV, g, Sq, blk) buffer.
+    # (REPRO_LEGACY_MASK=1 restores the hoistable variant — the §Perf
+    # baseline for the before/after comparison.)
+    import os as _os
+    legacy_mask = _os.environ.get("REPRO_LEGACY_MASK") == "1"
+    kpos_blocks = (jnp.arange(nblk, dtype=jnp.int32)[:, None] * block
+                   + jnp.arange(block, dtype=jnp.int32)[None, :])
+
+    def body(carry, xs):
+        m, l, acc = carry[0], carry[1], carry[2]
+        kt, vt, kpos = xs[0], xs[1], xs[2]
+        if legacy_mask:
+            # induction-variable mask: XLA hoists a stacked
+            # (nblk, ..., Sq, blk) pred buffer out of the scan (§Perf baseline)
+            blk = carry[3]
+            kpos = blk * block + jnp.arange(block, dtype=jnp.int32)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kt).astype(jnp.float32) * scale
+        mask = (kpos[None, :] > qpos[:, None]) if causal else \
+            jnp.zeros((Sq, block), bool)
+        mask = mask | (kpos[None, :] >= Skv)
+        s = jnp.where(mask[None, None, None], -1e30, s)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vt.dtype), vt)
+        acc = acc * corr[..., None].astype(acc.dtype) + pv
+        out = (m_new, l_new, acc) + ((carry[3] + 1,) if legacy_mask else ())
+        return out, None
+
+    m0 = jnp.full((B, KV, g, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, g, Sq, D), q.dtype)
+    c0 = (m0, l0, a0) + ((jnp.int32(0),) if legacy_mask else ())
+    carry_out, _ = jax.lax.scan(body, c0, (kb, vb, kpos_blocks))
+    m, l, acc = carry_out[0], carry_out[1], carry_out[2]
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+
+
+def mlp_forward(cfg: ModelConfig, p, x):
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    elif cfg.mlp == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi_up"]))
+    else:
+        h = jax.nn.gelu(x @ p["wi_up"])
+    h = shard(h, "batch", "seq", "ff")
+    return h @ p["wo"]
+
+
+def mlp_init(cfg: ModelConfig, key, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi_up": dense_init(ks[0], (d, f), cfg.adtype),
+         "wo": dense_init(ks[1], (f, d), cfg.adtype)}
+    if cfg.mlp == "swiglu":
+        p["wi_gate"] = dense_init(ks[2], (d, f), cfg.adtype)
+    return p
+
+
+def attn_init(cfg: ModelConfig, key):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.hdim
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], (d, h * hd), cfg.adtype),
+         "wk": dense_init(ks[1], (d, kv * hd), cfg.adtype),
+         "wv": dense_init(ks[2], (d, kv * hd), cfg.adtype),
+         "wo": dense_init(ks[3], (h * hd, d), cfg.adtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), cfg.adtype)
+        p["bk"] = jnp.zeros((kv * hd,), cfg.adtype)
+        p["bv"] = jnp.zeros((kv * hd,), cfg.adtype)
+    return p
+
+
+def attn_forward(cfg: ModelConfig, p, x, positions, *, kv_cache=None,
+                 cache_len=None, kv_override=None, causal=True):
+    """Returns (out, new_kv). kv_cache: dict(k, v) with static length; decode
+    writes at cache_len. kv_override: (k, v) for cross-attention."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.kv_heads, cfg.hdim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, h, hd)
+    if kv_override is not None:
+        k, v = kv_override
+        q = shard(q, "batch", "seq", "heads", None)
+        out = blockwise_attention(q, k, v, causal=False, block=cfg.attn_block)
+        return out.reshape(B, S, h * hd) @ p["wo"], None
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if kv_cache is not None:
+        zero = jnp.int32(0)   # uniform i32 indices (x64 flag is global)
+        idx = (zero, jnp.asarray(cache_len, jnp.int32), zero, zero)
+        kc = jax.lax.dynamic_update_slice(kv_cache["k"], k, idx)
+        vc = jax.lax.dynamic_update_slice(kv_cache["v"], v, idx)
+        if S == 1:    # decode: direct masked softmax (seq-parallelizable)
+            out = decode_attention(q, kc, vc,
+                                   jnp.asarray(cache_len, jnp.int32))
+        else:
+            out = blockwise_attention(q, kc, vc, causal=True,
+                                      q_offset=cache_len,
+                                      block=cfg.attn_block)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = blockwise_attention(q, k, v, causal=causal, block=cfg.attn_block)
+        new_cache = None
+    out = shard(out, "batch", "seq", "heads", None)
+    return out.reshape(B, S, h * hd) @ p["wo"], new_cache

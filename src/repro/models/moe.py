@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN: token-choice top-k router, GShard-style grouped
+capacity dispatch. Tokens are split into groups (sharded over the data axis);
+each group independently computes a (g, E, C) dispatch/combine pair with
+C = g·k/E·cf, so dispatch memory scales linearly in tokens. With experts
+sharded over the `model` mesh axis (EP), GSPMD lowers the group→expert
+einsums to all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models.common import ModelConfig, dense_init
+
+GROUP = 4096      # tokens per dispatch group
+
+
+def moe_init(cfg: ModelConfig, key):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wi_up": dense_init(ks[1], (E, d, f), cfg.adtype),
+        "wo": dense_init(ks[2], (E, f, d), cfg.adtype),
+    }
+    if cfg.mlp == "swiglu":
+        p["wi_gate"] = dense_init(ks[3], (E, d, f), cfg.adtype)
+    return p
+
+
+def moe_forward(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    g = min(GROUP, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    xt = x.reshape(G, g, d)
+    xt = shard(xt, "batch", None, None)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])              # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(np.ceil(g * k / E * cfg.capacity_factor)), 1)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)      # (G, g, k, E)
+    flat = onehot.reshape(G, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (G, g·k, E)
+    pos = (pos * flat).sum(-1).reshape(G, g, k)                  # (G, g, k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                            dtype=xt.dtype)[..., :cap]           # (G, g, k, C)
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(xt.dtype), pos_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32),
+                      gate_vals.astype(jnp.float32)).astype(xt.dtype)
+
+    xe = jnp.einsum("gtd,gtec->gecd", xt, disp)                  # (G, E, C, d)
+    xe = shard(xe, "batch", "experts", None, None)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xe, p["wi_up"])
+    else:
+        h = jnp.square(jax.nn.relu(
+            jnp.einsum("gecd,edf->gecf", xe, p["wi_up"])))
+    h = shard(h, "batch", "experts", None, "ff")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])                # (G, E, C, d)
+    ye = shard(ye, "batch", "experts", None, None)
+    y = jnp.einsum("gecd,gtec->gtd", ye, comb)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E,
+                                      dtype=jnp.float32), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * density_proxy)
+    return y.reshape(B, S, d), aux

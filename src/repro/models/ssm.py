@@ -1,0 +1,165 @@
+"""Mamba2 SSD (state-space duality) block — chunked, matmul-dominant form.
+
+The chunked SSD algorithm (arXiv:2405.21060 §6) decomposes the selective-scan
+into intra-chunk attention-like matmuls (MXU-friendly — the TPU adaptation)
+plus an inter-chunk state recurrence carried by lax.scan. Supports O(1)-state
+single-token decode for the decode_32k / long_500k serving cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models.common import ModelConfig, dense_init, rmsnorm
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_state
+
+
+def ssm_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    d_in, nheads, nstate = ssm_dims(cfg)
+    conv_dim = d_in + 2 * nstate
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * nstate + nheads),
+                              cfg.adtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_dim), cfg.adtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.adtype),
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), cfg.adtype),
+        "out_proj": dense_init(ks[2], (d_in, d), cfg.adtype),
+    }
+
+
+def _segsum(x):
+    """(..., T) -> (..., T, T) lower-triangular segment sums."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((T, T), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d. x: (B,S,C), w: (K,C). state: (B,K-1,C)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b, xp[:, -(K - 1):, :]
+
+
+def ssm_forward(cfg: ModelConfig, p, x, *, state=None):
+    """x: (B, S, d). state: dict(h, conv) for decode (S small) or None.
+
+    Returns (y, new_state)."""
+    B, S, _ = x.shape
+    d_in, nheads, nstate = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bmat, Cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + nstate, 2 * d_in + 2 * nstate],
+        axis=-1)
+    conv_in = jnp.concatenate([xs, Bmat, Cmat], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        None if state is None else state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bmat, Cmat = jnp.split(conv_out, [d_in, d_in + nstate], axis=-1)
+    xs = xs.reshape(B, S, nheads, hd)
+    xs = shard(xs, "batch", "seq", "heads", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                      # (H,)
+    dA = dt * a                                                   # (B,S,H)
+
+    if state is not None:
+        h0 = state["h"]                                           # (B,H,hd,n)
+        # single/few-token recurrence
+        def step(h, inp):
+            xt, bt, ct, dat, dtt = inp
+            dh = jnp.einsum("bhd,bn,bh->bhdn", xt, bt, dtt.astype(xt.dtype))
+            h = h * jnp.exp(dat)[:, :, None, None].astype(h.dtype) \
+                + dh.astype(h.dtype)
+            y = jnp.einsum("bhdn,bn->bhd", h, ct)
+            return h, y
+        inps = (xs.swapaxes(0, 1), Bmat.swapaxes(0, 1), Cmat.swapaxes(0, 1),
+                dA.swapaxes(0, 1), dt.swapaxes(0, 1))
+        h, ys = jax.lax.scan(step, h0, inps)
+        y = ys.swapaxes(0, 1)                                     # (B,S,H,hd)
+        new_state = {"h": h, "conv": conv_state}
+    else:
+        y = _ssd_chunked(cfg, xs, Bmat, Cmat, dA, dt)
+        new_state = None
+
+    y = y + xs * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], new_state
+
+
+def _ssd_chunked(cfg: ModelConfig, xs, Bmat, Cmat, dA, dt):
+    """Chunked SSD: intra-chunk matmuls + inter-chunk scan.
+
+    xs: (B,S,H,hd), Bmat/Cmat: (B,S,n), dA/dt: (B,S,H) float32."""
+    B, S, H, hd = xs.shape
+    n = Bmat.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:   # right-pad to a chunk multiple; padded steps can't affect y[:S]
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xs, Bmat, Cmat, dA, dt = map(padf, (xs, Bmat, Cmat, dA, dt))
+        S_out = S
+        S = S + pad
+    else:
+        S_out = S
+    nc = S // Q
+    r = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    xs_c, B_c, C_c = r(xs), r(Bmat), r(Cmat)
+    dA_c, dt_c = r(dA), r(dt)                                    # (B,nc,Q,H)
+    dA_h = dA_c.transpose(0, 1, 3, 2)                            # (B,nc,H,Q)
+    # intra-chunk: Y = (C B^T ⊙ L) (dt·X)
+    L = jnp.exp(_segsum(dA_h))                                   # (B,nc,H,Q,Q)
+    CB = jnp.einsum("bcqn,bcsn->bcqs", C_c, B_c)                 # (B,nc,Q,Q)
+    M = CB[:, :, None] * L                                       # (B,nc,H,Q,Q)
+    dtx = xs_c * dt_c[..., None].astype(xs_c.dtype)              # (B,nc,Q,H,hd)
+    y_intra = jnp.einsum("bchqs,bcshd->bcqhd", M.astype(xs_c.dtype), dtx)
+    # chunk states: h_c = Σ_s exp(A_end - A_s) dt_s B_s x_s
+    Aend = jnp.cumsum(dA_h, axis=-1)
+    decay_to_end = jnp.exp(Aend[..., -1:] - Aend)                # (B,nc,H,Q)
+    st = jnp.einsum("bchq,bcqhd,bcqn->bchdn",
+                    decay_to_end.astype(xs_c.dtype),
+                    dtx, B_c)                                    # (B,nc,H,hd,n)
+    chunk_decay = jnp.exp(Aend[..., -1])                         # (B,nc,H)
+
+    def carry(h, inp):
+        st_c, dec = inp
+        h_new = h * dec[..., None, None].astype(h.dtype) + st_c
+        return h_new, h                                          # emit h_prev
+    h0 = jnp.zeros((B, H, hd, n), xs.dtype)
+    _, h_prevs = jax.lax.scan(
+        carry, h0, (st.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                             # (B,nc,H,hd,n)
+    # inter-chunk: y += C_t · (decay_from_start · h_prev)
+    decay_in = jnp.exp(Aend)                                     # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqn,bchdn,bchq->bcqhd", C_c, h_prevs,
+                         decay_in.astype(xs_c.dtype))
+    return (y_intra + y_inter).reshape(B, S, H, hd)[:, :S_out]
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int, dtype):
+    d_in, nheads, nstate = ssm_dims(cfg)
+    conv_dim = d_in + 2 * nstate
+    return {
+        "h": jnp.zeros((batch, nheads, cfg.ssm_head_dim, nstate), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+    }

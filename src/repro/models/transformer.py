@@ -1,0 +1,284 @@
+"""Model assembly for all families: dense / moe / ssm / hybrid / vlm / audio.
+
+Layers are stacked along a leading axis and executed with lax.scan (+ optional
+jax.checkpoint) — one layer is compiled once regardless of depth, which keeps
+the 512-device dry-run compiles tractable and enables pipeline-friendly HLO.
+
+Public entry points:
+  init_params(cfg, rng)                     -> params pytree
+  forward(cfg, params, tokens|embeds)       -> logits (train path)
+  train_loss(cfg, params, batch)            -> scalar loss, metrics
+  init_cache(cfg, batch, max_len)           -> serve cache pytree
+  prefill(cfg, params, tokens, cache)       -> (logits_last, cache)
+  decode_step(cfg, params, token, cache, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models import moe as moe_mod, ssm as ssm_mod
+from repro.models.common import (ModelConfig, attn_forward, attn_init,
+                                 dense_init, mlp_forward, mlp_init, rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# block definitions (one "block" = the scanned unit)
+# ---------------------------------------------------------------------------
+
+
+def _block_structure(cfg: ModelConfig):
+    """(num_blocks, sub-layer plan per block). The scanned unit:
+    dense/moe/audio: 1 attn+ffn layer; ssm: 1 ssd layer;
+    hybrid: (attn_period-1) ssd + 1 attn+mlp;
+    vlm: 1 cross-attn + (cross_attn_period-1) self-attn layers."""
+    f = cfg.family
+    if f in ("dense", "moe", "audio"):
+        return cfg.num_layers, {"attn": 1, "ssm": 0, "cross": 0}
+    if f == "ssm":
+        return cfg.num_layers, {"attn": 0, "ssm": 1, "cross": 0}
+    if f == "hybrid":
+        period = cfg.attn_period
+        assert period >= 2 and cfg.num_layers % period == 0
+        return cfg.num_layers // period, {"attn": 1, "ssm": period - 1,
+                                          "cross": 0}
+    if f == "vlm":
+        period = cfg.cross_attn_period
+        assert period >= 2 and cfg.num_layers % period == 0
+        return cfg.num_layers // period, {"attn": period - 1, "ssm": 0,
+                                          "cross": 1}
+    raise ValueError(f)
+
+
+def _layer_init(cfg: ModelConfig, key):
+    nb, plan = _block_structure(cfg)
+    ks = iter(jax.random.split(key, 16))
+    p = {}
+    if plan["ssm"]:
+        p["ssm"] = [dict(ssm_mod.ssm_init(cfg, next(ks)),
+                         ln=jnp.ones((cfg.d_model,), cfg.adtype))
+                    for _ in range(plan["ssm"])]
+    if plan["cross"]:
+        p["cross"] = dict(attn_init(cfg, next(ks)),
+                          ln=jnp.ones((cfg.d_model,), cfg.adtype))
+        p["kx"] = dense_init(next(ks), (cfg.frontend_dim or cfg.d_model,
+                                        cfg.kv_heads * cfg.hdim), cfg.adtype)
+        p["vx"] = dense_init(next(ks), (cfg.frontend_dim or cfg.d_model,
+                                        cfg.kv_heads * cfg.hdim), cfg.adtype)
+    if plan["attn"]:
+        attn = []
+        for _ in range(plan["attn"]):
+            a = {"attn": attn_init(cfg, next(ks)),
+                 "ln1": jnp.ones((cfg.d_model,), cfg.adtype),
+                 "ln2": jnp.ones((cfg.d_model,), cfg.adtype)}
+            if cfg.family == "moe":
+                a["ffn"] = moe_mod.moe_init(cfg, next(ks))
+            else:
+                a["ffn"] = mlp_init(cfg, next(ks))
+            attn.append(a)
+        p["attn_layers"] = attn
+    return p
+
+
+def _attn_sublayer(cfg, p, x, positions, kv_cache=None, cache_len=None):
+    h, new_cache = attn_forward(cfg, p["attn"], rmsnorm(x, p["ln1"],
+                                                        cfg.norm_eps),
+                                positions, kv_cache=kv_cache,
+                                cache_len=cache_len)
+    x = x + h
+    hn = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_forward(cfg, p["ffn"], hn)
+    else:
+        y, aux = mlp_forward(cfg, p["ffn"], hn), 0.0
+    return x + y, new_cache, aux
+
+
+def _block_forward(cfg: ModelConfig, p, x, positions, *, frontend=None,
+                   cache=None, cache_len=None):
+    """One scanned block. cache: dict with optional 'kv' (per attn sub-layer,
+    stacked), 'ssm' (per ssd sub-layer, stacked). Returns (x, new_cache, aux)."""
+    aux = 0.0
+    new_cache = {}
+    if "ssm" in p:
+        states = []
+        for i, sp in enumerate(p["ssm"]):
+            st = None if cache is None else jax.tree.map(
+                lambda c: c[i], cache["ssm"])
+            h, new_st = ssm_mod.ssm_forward(
+                cfg, sp, rmsnorm(x, sp["ln"], cfg.norm_eps), state=st)
+            x = x + h
+            if new_st is not None:
+                states.append(new_st)
+        if states:
+            new_cache["ssm"] = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    if "cross" in p and frontend is not None:
+        B = x.shape[0]
+        kx = (frontend @ p["kx"]).reshape(B, -1, cfg.kv_heads, cfg.hdim)
+        vx = (frontend @ p["vx"]).reshape(B, -1, cfg.kv_heads, cfg.hdim)
+        h, _ = attn_forward(cfg, p["cross"],
+                            rmsnorm(x, p["cross"]["ln"], cfg.norm_eps),
+                            positions, kv_override=(kx, vx))
+        x = x + h
+    if "attn_layers" in p:
+        kvs = []
+        for i, ap in enumerate(p["attn_layers"]):
+            kv = None if cache is None else jax.tree.map(
+                lambda c: c[i], cache["kv"])
+            x, new_kv, a = _attn_sublayer(cfg, ap, x, positions,
+                                          kv_cache=kv, cache_len=cache_len)
+            aux = aux + a
+            if new_kv is not None:
+                kvs.append(new_kv)
+        if kvs:
+            new_cache["kv"] = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    nb, _ = _block_structure(cfg)
+    ke, kl, ko, kf = jax.random.split(rng, 4)
+    layers = jax.vmap(lambda k: _layer_init(cfg, k))(jax.random.split(kl, nb))
+    p = {
+        "embed": dense_init(ke, (cfg.vocab_size, cfg.d_model), cfg.adtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.adtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ko, (cfg.d_model, cfg.vocab_size), cfg.adtype)
+    return p
+
+
+def abstract_params(cfg: ModelConfig):
+    """Shape/dtype-only params (no allocation) — dry-run path."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg, params, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds.astype(cfg.adtype)
+    x = params["embed"][tokens]
+    return shard(x, "batch", "seq", None)
+
+
+def _logits(cfg, params, x):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def forward(cfg: ModelConfig, params, tokens=None, *, embeds=None,
+            frontend=None):
+    x = _embed(cfg, params, tokens, embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, lp):
+        y, aux, _ = carry[0], carry[1], None
+        y, _, a = _block_forward(cfg, lp, y, positions, frontend=frontend)
+        return (y, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, 0.0), params["layers"])
+    return _logits(cfg, params, x), aux
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    """batch: dict(tokens (B,S), targets (B,S), mask (B,S)[, frontend])."""
+    logits, aux = forward(cfg, params, batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          frontend=batch.get("frontend"))
+    tgt = batch["targets"]
+    mask = batch.get("mask")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = float(np.prod(tgt.shape))
+    loss = nll.sum() / denom
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    nb, plan = _block_structure(cfg)
+    c = {}
+    if plan["attn"]:
+        kv = {"k": jnp.zeros((nb, plan["attn"], batch, max_len, cfg.kv_heads,
+                              cfg.hdim), cfg.adtype),
+              "v": jnp.zeros((nb, plan["attn"], batch, max_len, cfg.kv_heads,
+                              cfg.hdim), cfg.adtype)}
+        kv = jax.tree.map(
+            lambda x: shard(x, "layers", None, "batch", None, "kv_heads", None),
+            kv)
+        c["kv"] = kv
+    if plan["ssm"]:
+        st = ssm_mod.ssm_init_state(cfg, batch, cfg.adtype)
+        c["ssm"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None, None], (nb, plan["ssm"]) + x.shape), st)
+    return c
+
+
+def _serve_scan(cfg, params, x, positions, cache, cache_len, frontend=None):
+    def body(y, xs):
+        lp, lc = xs
+        y, nc, _ = _block_forward(cfg, lp, y, positions, cache=lc,
+                                  cache_len=cache_len, frontend=frontend)
+        # keep cache keys stable for scan stacking
+        out = {k: nc[k] for k in lc}
+        return y, out
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return x, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, embeds=None,
+            frontend=None):
+    x = _embed(cfg, params, tokens, embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x, cache = _serve_scan(cfg, params, x, positions, cache, 0,
+                           frontend=frontend)
+    return _logits(cfg, params, x[:, -1:]), cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, pos, *, frontend=None):
+    """token: (B, 1) int32; pos: scalar current length."""
+    x = _embed(cfg, params, token)
+    positions = pos + jnp.zeros((1, 1), dtype=jnp.int32)
+    x, cache = _serve_scan(cfg, params, x, positions, cache, pos,
+                           frontend=frontend)
+    return _logits(cfg, params, x), cache
+
+
+def decode_step_embeds(cfg: ModelConfig, params, embeds, cache, pos):
+    """[audio] decode: one precomputed frame embedding (B, 1, d)."""
+    x = _embed(cfg, params, None, embeds)
+    positions = pos + jnp.zeros((1, 1), dtype=jnp.int32)
+    x, cache = _serve_scan(cfg, params, x, positions, cache, pos)
+    return _logits(cfg, params, x), cache

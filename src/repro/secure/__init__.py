@@ -1,0 +1,3 @@
+from repro.secure.secure_linear import SecureLinear, SecureMatmulEngine
+
+__all__ = ["SecureLinear", "SecureMatmulEngine"]

@@ -1,0 +1,152 @@
+"""Batched serving engine: prefill + decode steps with sharded KV caches and
+continuous-batching slot management (host-side scheduler, device-side steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import get_rules
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    temperature: float = 0.0       # 0 = greedy
+
+
+def serve_prefill_step(cfg: ModelConfig, params, tokens, cache):
+    """The dry-run 'prefill' cell: one full-sequence prefill. For [audio]
+    archs the input is precomputed frame embeddings (float), not tokens."""
+    if jnp.issubdtype(tokens.dtype, jnp.floating):
+        return tf.prefill(cfg, params, None, cache, embeds=tokens)
+    return tf.prefill(cfg, params, tokens, cache)
+
+
+def serve_decode_step(cfg: ModelConfig, params, token, cache, pos):
+    """The dry-run 'decode' cell: one new token against a long KV cache."""
+    if jnp.issubdtype(token.dtype, jnp.floating):
+        return tf.decode_step_embeds(cfg, params, token, cache, pos)
+    return tf.decode_step(cfg, params, token, cache, pos)
+
+
+def make_sharded_serve_steps(cfg: ModelConfig, mesh, params_shapes,
+                             batch: int, max_len: int):
+    rules = get_rules()
+    from repro.train.train_step import param_shardings
+    p_sh = param_shardings(cfg, params_shapes, rules)
+    tok_sh = rules.sharding("batch", None)
+
+    cache_shapes = jax.eval_shape(lambda: tf.init_cache(cfg, batch, max_len))
+    cache_sh = cache_shardings(rules, cache_shapes)
+
+    prefill = jax.jit(functools.partial(serve_prefill_step, cfg),
+                      in_shardings=(p_sh, tok_sh, cache_sh),
+                      out_shardings=(None, cache_sh))
+    decode = jax.jit(functools.partial(serve_decode_step, cfg),
+                     in_shardings=(p_sh, tok_sh, cache_sh, None),
+                     out_shardings=(None, cache_sh), donate_argnums=(2,))
+    return prefill, decode, cache_sh
+
+
+def cache_shardings(rules, cache_shapes, seq_shard_kv: bool = False):
+    """Path-aware cache shardings (divisibility-checked):
+      kv k/v (nb, sub, B, S, KV, hd): batch over data; kv_heads over model,
+        falling back to sequence-sharded KV (SP) when KV doesn't divide;
+      ssm h (nb, sub, B, H, hd, n): heads over model;
+      ssm conv (nb, sub, B, K-1, C): channels over model.
+
+    seq_shard_kv=True additionally shards the KV sequence over whatever mesh
+    axes remain unused (flash-decoding; §Perf) — dominant win for
+    small-batch long-context decode where `data` would otherwise idle."""
+    from repro.distributed.sharding import sanitize_spec, logical_axis_size
+
+    def to_sh(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        dims = leaf.shape
+        if "kv" in pstr.split("/"):
+            spec = [None, None, "batch", None, "kv_heads", None]
+            if dims[4] % logical_axis_size(rules, "kv_heads") != 0:
+                spec[4] = None
+                spec[3] = "seq_sp"           # shard the KV sequence instead
+            elif seq_shard_kv:
+                spec[3] = "seq_data"         # data axis; heads keep model
+        elif pstr.endswith("h"):
+            spec = [None, None, "batch", "heads", None, None][: leaf.ndim]
+        elif pstr.endswith("conv"):
+            spec = [None, None, "batch", None, "ff"]
+        else:
+            spec = [None] * leaf.ndim
+        return rules.sharding(*sanitize_spec(rules, spec, dims))
+
+    return jax.tree_util.tree_map_with_path(to_sh, cache_shapes)
+
+
+class ContinuousBatcher:
+    """Host-side continuous batching: fixed device batch of slots; finished
+    sequences are replaced by queued requests between decode steps."""
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        self.cfg, self.scfg, self.params = cfg, scfg, params
+        self.cache = tf.init_cache(cfg, scfg.max_batch, scfg.max_len)
+        self.slots: list[Optional[dict]] = [None] * scfg.max_batch
+        self.queue: list[dict] = []
+        self.results: dict[int, list[int]] = {}
+        self._next_id = 0
+
+    def submit(self, prompt_tokens: np.ndarray, max_new: int) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append({"id": rid, "prompt": prompt_tokens,
+                           "max_new": max_new, "done": 0})
+        self.results[rid] = []
+        return rid
+
+    def _admit(self):
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                req = self.queue.pop(0)
+                # per-slot prefill (batch=1 cache slice update)
+                cache1 = tf.init_cache(self.cfg, 1, self.scfg.max_len)
+                logits, cache1 = tf.prefill(
+                    self.cfg, self.params, req["prompt"][None], cache1)
+                self.cache = jax.tree.map(
+                    lambda c, c1: c.at[:, :, i:i + 1].set(c1), self.cache,
+                    cache1)
+                tok = int(jnp.argmax(logits[0, -1]))
+                self.results[req["id"]].append(tok)
+                req["pos"] = req["prompt"].shape[0]
+                req["last"] = tok
+                self.slots[i] = req
+
+    def step(self) -> bool:
+        """One decode step over all active slots. Returns False when idle."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return False
+        toks = np.zeros((self.scfg.max_batch, 1), np.int32)
+        pos = max(self.slots[i]["pos"] for i in active)
+        for i in active:
+            toks[i, 0] = self.slots[i]["last"]
+        logits, self.cache = tf.decode_step(
+            self.cfg, self.params, jnp.asarray(toks), self.cache, pos)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i in active:
+            s = self.slots[i]
+            s["last"] = int(nxt[i])
+            s["pos"] += 1
+            s["done"] += 1
+            self.results[s["id"]].append(s["last"])
+            if s["done"] >= s["max_new"] or s["pos"] >= self.scfg.max_len - 1:
+                self.slots[i] = None
+        return True

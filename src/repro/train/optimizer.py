@@ -1,0 +1,99 @@
+"""AdamW with mixed precision (bf16 params, fp32 master/moments), global-norm
+clipping, cosine LR, and optional int8 gradient compression with error
+feedback (cuts DP all-reduce volume 4×; the error-feedback residual keeps the
+update unbiased in the long run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False     # int8 + error feedback
+
+
+def lr_at(cfg: OptConfig, step):
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(cfg: OptConfig, params):
+    f32 = lambda p: p.astype(jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+    }
+    if cfg.compress_grads:
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return state
+
+
+def _compress_decompress(g, ef):
+    """int8 quantize (per-tensor absmax) + error feedback residual."""
+    gt = g + ef
+    scale = jnp.maximum(jnp.max(jnp.abs(gt)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gt / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gt - deq
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """Returns (new_params_bf16, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.compress_grads:
+        pairs = jax.tree.map(_compress_decompress, grads, state["ef"])
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda p: p[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        new = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                             + cfg.weight_decay * master)
+        return new, m, v
+
+    out = jax.tree.map(upd, state["master"], grads, state["m"], state["v"])
+    new_master = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mst, p: mst.astype(p.dtype),
+                              new_master, params)
+    new_state = dict(state, step=step, master=new_master, m=new_m, v=new_v)
+    if cfg.compress_grads:
+        new_state["ef"] = new_ef
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

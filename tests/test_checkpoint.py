@@ -1,0 +1,100 @@
+"""Checkpoint/restart + fault tolerance control plane."""
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro  # noqa: F401
+from repro.checkpoint import checkpoint as ckpt
+from repro.distributed.fault import (ElasticRunner, FaultConfig,
+                                     HeartbeatTracker, SimulatedFailure,
+                                     StragglerDetector)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 8)),
+                       "b": jnp.zeros((8,))},
+            "opt": {"step": jnp.zeros((), jnp.int32),
+                    "m": {"w": jnp.ones((4, 8)), "b": jnp.zeros((8,))}}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    s = _state()
+    ckpt.save(str(tmp_path), 10, s)
+    template = jax.eval_shape(lambda: _state())
+    restored, meta = ckpt.restore(str(tmp_path), template)
+    assert meta["step"] == 10
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prune_keeps_latest(tmp_path):
+    s = _state()
+    for step in [1, 2, 3, 4, 5]:
+        ckpt.save(str(tmp_path), step, s, keep=2)
+    assert sorted(ckpt.all_steps(str(tmp_path))) == [4, 5]
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_async_checkpointer(tmp_path):
+    ac = ckpt.AsyncCheckpointer(str(tmp_path))
+    ac.save(7, _state())
+    ac.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+def test_heartbeat_and_straggler():
+    t = {"now": 0.0}
+    hb = HeartbeatTracker(4, FaultConfig(heartbeat_timeout_s=10),
+                          clock=lambda: t["now"])
+    t["now"] = 5.0
+    hb.beat(0)
+    hb.beat(1)
+    t["now"] = 12.0
+    assert set(hb.dead_hosts()) == {2, 3}
+
+    sd = StragglerDetector(FaultConfig(step_deadline_factor=3.0))
+    for _ in range(5):
+        assert not sd.observe(1.0)
+    assert sd.observe(10.0)           # 10x the EMA -> straggler
+    assert sd.flagged == 1
+
+
+def test_elastic_runner_recovers_and_matches(tmp_path):
+    """Training with injected failures == uninterrupted training (exactly:
+    the data pipeline is step-keyed and the step fn deterministic)."""
+    def step_fn(state, batch):
+        w = state["params"]["w"] - 0.1 * batch["g"]
+        return {"params": {"w": w}}, {"loss": float(jnp.sum(w))}
+
+    def batch_fn(step):
+        rng = np.random.default_rng(step)
+        return {"g": jnp.asarray(rng.normal(size=(4, 8)))}
+
+    def template():
+        return jax.eval_shape(
+            lambda: {"params": {"w": jnp.zeros((4, 8))}})
+
+    cfg = FaultConfig(ckpt_every_steps=3)
+    init = {"params": {"w": jnp.zeros((4, 8))}}
+
+    # uninterrupted
+    run1 = ElasticRunner(str(tmp_path / "a"), cfg, step_fn, batch_fn, template)
+    s1, _ = run1.run(init, 10)
+
+    # failures at steps 4 and 8
+    fails = {4: True, 8: True}
+
+    def hook(step):
+        if fails.pop(step, None):
+            raise SimulatedFailure(f"injected at {step}")
+
+    run2 = ElasticRunner(str(tmp_path / "b"), cfg, step_fn, batch_fn, template)
+    s2, _ = run2.run(init, 10, fail_hook=hook)
+    assert run2.restarts == 2
+    np.testing.assert_allclose(np.asarray(s1["params"]["w"]),
+                               np.asarray(s2["params"]["w"]), rtol=1e-6)

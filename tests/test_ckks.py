@@ -1,0 +1,155 @@
+"""CKKS end-to-end correctness: encode/decode, enc/dec, homomorphic ops,
+hybrid keyswitching (Mult, Rot), rescale, merged ModDown+Rescale, automorph."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro  # noqa: F401
+from repro.core import automorph, modmath as mm, ntt
+from repro.core.params import toy_params, get_context
+from repro.core.ckks import CkksEngine
+
+
+@pytest.fixture(scope="module")
+def eng():
+    # k >= alpha so that P >= D_j (hybrid-KS noise stays ~ N·e; see
+    # HEParams.keyswitch_noise_sane — the paper's Set-A violates this).
+    return CkksEngine(toy_params(logN=7, L=4, k=3, beta=2, scale_bits=26))
+
+
+@pytest.fixture(scope="module")
+def keys(eng):
+    rng = np.random.default_rng(42)
+    return eng.keygen(rng, rot_steps=[1, 2, 3, -1, 5])
+
+
+def _msg(eng, rng, scale=1.0):
+    return (rng.normal(size=eng.params.slots) * scale).astype(np.float64)
+
+
+def test_encode_decode_roundtrip(eng):
+    rng = np.random.default_rng(0)
+    m = _msg(eng, rng)
+    got = eng.decode(eng.encode(m)).real
+    np.testing.assert_allclose(got, m, atol=1e-5)
+
+
+def test_encrypt_decrypt(eng, keys):
+    rng = np.random.default_rng(1)
+    m = _msg(eng, rng)
+    ct = eng.encrypt(eng.encode(m), keys, rng)
+    got = eng.decrypt_decode(ct, keys).real
+    np.testing.assert_allclose(got, m, atol=1e-4)
+
+
+def test_add_sub(eng, keys):
+    rng = np.random.default_rng(2)
+    m1, m2 = _msg(eng, rng), _msg(eng, rng)
+    ct1 = eng.encrypt(eng.encode(m1), keys, rng)
+    ct2 = eng.encrypt(eng.encode(m2), keys, rng)
+    np.testing.assert_allclose(eng.decrypt_decode(eng.add(ct1, ct2), keys).real,
+                               m1 + m2, atol=1e-4)
+    np.testing.assert_allclose(eng.decrypt_decode(eng.sub(ct1, ct2), keys).real,
+                               m1 - m2, atol=1e-4)
+
+
+def test_cmult_rescale(eng, keys):
+    rng = np.random.default_rng(3)
+    m1, m2 = _msg(eng, rng), _msg(eng, rng)
+    ct = eng.encrypt(eng.encode(m1), keys, rng)
+    pt = eng.encode(m2)
+    out = eng.rescale(eng.cmult(ct, pt))
+    assert out.level == ct.level - 1
+    np.testing.assert_allclose(eng.decrypt_decode(out, keys).real, m1 * m2,
+                               atol=1e-3)
+
+
+def test_mult_relin_rescale(eng, keys):
+    rng = np.random.default_rng(4)
+    m1, m2 = _msg(eng, rng), _msg(eng, rng)
+    ct1 = eng.encrypt(eng.encode(m1), keys, rng)
+    ct2 = eng.encrypt(eng.encode(m2), keys, rng)
+    out = eng.rescale(eng.mult(ct1, ct2, keys))
+    np.testing.assert_allclose(eng.decrypt_decode(out, keys).real, m1 * m2,
+                               atol=1e-2)
+
+
+def test_mult_at_lower_levels(eng, keys):
+    """Keyswitch correctness must hold after level drops (digit count shrinks)."""
+    rng = np.random.default_rng(5)
+    m1, m2 = _msg(eng, rng), _msg(eng, rng)
+    ct1 = eng.mod_drop(eng.encrypt(eng.encode(m1), keys, rng), 2)
+    ct2 = eng.mod_drop(eng.encrypt(eng.encode(m2), keys, rng), 2)
+    out = eng.rescale(eng.mult(ct1, ct2, keys))
+    assert out.level == 1
+    np.testing.assert_allclose(eng.decrypt_decode(out, keys).real, m1 * m2,
+                               atol=1e-2)
+
+
+@pytest.mark.parametrize("r", [1, 2, 3, -1, 5])
+def test_rotate(eng, keys, r):
+    rng = np.random.default_rng(6)
+    m = _msg(eng, rng)
+    ct = eng.encrypt(eng.encode(m), keys, rng)
+    got = eng.decrypt_decode(eng.rotate(ct, r, keys), keys).real
+    np.testing.assert_allclose(got, np.roll(m, -r), atol=1e-3)
+
+
+def test_rotate_composes(eng, keys):
+    rng = np.random.default_rng(7)
+    m = _msg(eng, rng)
+    ct = eng.encrypt(eng.encode(m), keys, rng)
+    out = eng.rotate(eng.rotate(ct, 1, keys), 2, keys)
+    np.testing.assert_allclose(eng.decrypt_decode(out, keys).real,
+                               np.roll(m, -3), atol=1e-3)
+
+
+def test_depth_chain(eng, keys):
+    """Consecutive multiplications down to level 1 (paper: L >= 4 per MM)."""
+    rng = np.random.default_rng(8)
+    m = rng.uniform(0.5, 1.5, size=eng.params.slots)
+    ct = eng.encrypt(eng.encode(m), keys, rng)
+    cur, ref = ct, m.copy()
+    for _ in range(3):
+        cur = eng.rescale(eng.mult(cur, cur, keys))
+        ref = ref * ref
+    np.testing.assert_allclose(eng.decrypt_decode(cur, keys).real, ref, rtol=0.05)
+
+
+def test_eval_automorph_matches_coeff_path(eng):
+    """eval-domain permutation == NTT ∘ coeff-automorph ∘ iNTT."""
+    rng = np.random.default_rng(9)
+    p = eng.params
+    view = eng.main_basis(p.L)
+    qs = np.asarray(view.moduli_host, dtype=np.uint64)[:, None]
+    x = rng.integers(0, qs, size=(p.L + 1, p.N)).astype(np.uint32)
+    xe = eng._ntt(jnp.asarray(x), view)
+    for g in [automorph.galois_elt_rot(1, p.N),
+              automorph.galois_elt_rot(5, p.N),
+              automorph.galois_elt_conj(p.N)]:
+        via_eval = automorph.apply_eval(xe, p.N, g)
+        via_coeff = eng._ntt(
+            automorph.apply_coeff(jnp.asarray(x), p.N, g, view.moduli), view)
+        np.testing.assert_array_equal(np.asarray(via_eval), np.asarray(via_coeff))
+
+
+def test_merged_moddown_rescale(eng, keys):
+    """_mod_down_eval(drop_last=True) == ModDown then Rescale (within noise)."""
+    rng = np.random.default_rng(10)
+    m = _msg(eng, rng)
+    ct = eng.encrypt(eng.encode(m), keys, rng)
+    ell = ct.level
+    p = eng.params
+    full = tuple(range(ell + 1)) + tuple(range(p.num_main, p.num_total))
+    qs = np.asarray([eng.ctx.moduli_host[i] for i in full], dtype=np.uint64)[:, None]
+    x = jnp.asarray(rng.integers(0, qs, size=(len(full), p.N)).astype(np.uint32))
+    merged = eng._mod_down_eval(x, ell, drop_last=True)
+    two_step_full = eng._mod_down_eval(x, ell, drop_last=False)
+    two_step = eng._rescale_poly(two_step_full, ell)
+    # both compute round(x/(P q_ell)) with independent flooring: diff ∈ {0, ±1}
+    a = np.asarray(merged).astype(np.int64)
+    b = np.asarray(two_step).astype(np.int64)
+    qcol = np.asarray([eng.ctx.moduli_host[i] for i in range(ell)],
+                      dtype=np.int64)[:, None]
+    diff = np.minimum(np.abs(a - b) % qcol, (-(a - b)) % qcol)
+    assert diff.max() <= 1

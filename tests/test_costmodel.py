@@ -1,0 +1,70 @@
+"""Cost model (§III) must reproduce the paper's own numbers."""
+import pytest
+
+import repro  # noqa: F401
+from repro.core.costmodel import CostModel, MB, report
+from repro.core.params import SET_A, SET_B, SET_C
+from repro.core.hemm import min_logN
+
+
+def approx(x, target, tol=0.08):
+    return abs(x - target) / target < tol
+
+
+def test_set_a_paper_numbers():
+    cm = CostModel(SET_A, "paper")
+    assert approx(cm.b_ct() / MB, 0.43)        # §III-B3: "0.43 MB"
+    assert approx(cm.m_hemm / MB, 3.6)         # "approximately 3.6 MB"
+
+
+def test_set_b_paper_numbers():
+    cm = CostModel(SET_B, "paper")
+    assert approx(cm.b_ct() / MB, 6.7)         # "6.7 MB"
+    assert approx(cm.m_hemm / MB, 61.0)        # "about 61 MB"
+
+
+def test_set_c_paper_numbers():
+    cm = CostModel(SET_C, "paper")
+    assert approx(cm.b_ct() / MB, 27.0)        # "27 MB"
+    assert approx(cm.m_hemm / MB, 255.0)       # "approximately 255 MB"
+    assert approx(cm.m_mo_hlt / MB, 29.0)      # §IV: "about 29 MB"
+    assert cm.m_hemm / cm.m_mo_hlt > 8         # the headline reduction
+
+
+def test_mo_hlt_always_fits_u280():
+    sram = 43 * MB                              # Alveo U280 on-chip SRAM
+    for p in (SET_A, SET_B, SET_C):
+        cm = CostModel(p, "paper")
+        assert cm.m_mo_hlt < sram
+    # ...while the unoptimized requirement does not (Set-B/C)
+    assert CostModel(SET_B, "paper").m_hemm > sram
+    assert CostModel(SET_C, "paper").m_hemm > sram
+
+
+def test_traffic_model_ordering():
+    sram = 43 * MB
+    for p in (SET_B, SET_C):
+        cm = CostModel(p, "paper")
+        d = 127                                 # e.g. 64-64-64 σ HLT
+        assert cm.mo_hlt_traffic(d, sram) < cm.baseline_hlt_traffic(d, sram) / 50
+
+
+def test_min_logN():
+    assert min_logN(64, 64, 64) == 13           # matches Set-A pairing
+    assert min_logN(128, 128, 128) == 15        # Set-B
+    assert min_logN(160, 160, 160) == 16        # Set-C (2·160·160 = 51200)
+    assert min_logN(64, 16, 64) == 13           # Type-II output bound (m·n)
+
+
+def test_depth_requirement():
+    cm = CostModel(SET_A, "paper")
+    assert cm.table1_counts(64, 64, 64)["total"]["Depth"] == 3
+    # paper: "evaluating a single HE MM requires ... L >= 4"
+    assert SET_A.L >= 4
+
+
+def test_tpu_word_model():
+    cm = CostModel(SET_C, "tpu")
+    assert cm.bytes_per_coeff == 4.0
+    r = report(SET_C, "tpu")
+    assert r["M_mo_hlt_MB"] < r["M_hemm_MB"]

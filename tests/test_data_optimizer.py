@@ -1,0 +1,83 @@
+"""Data pipeline determinism/elasticity + optimizer behaviour."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro  # noqa: F401
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, PrefetchLoader, synth_batch
+from repro.train.optimizer import (OptConfig, apply_updates, init_opt_state,
+                                   lr_at)
+
+
+CFG = get_smoke_config("internlm2-1.8b")
+
+
+def test_data_deterministic_and_host_sharded():
+    d_all = DataConfig(global_batch=8, seq_len=16)
+    full = synth_batch(CFG, d_all, step=3)
+    # two-host split reproduces exactly the same global batch
+    parts = []
+    for h in range(2):
+        d = DataConfig(global_batch=8, seq_len=16, num_hosts=2, host_id=h)
+        parts.append(synth_batch(CFG, d, step=3))
+    merged = np.concatenate([p["tokens"] for p in parts])
+    np.testing.assert_array_equal(merged, full["tokens"])
+    # elastic: 4-host split also reproduces it (restart with more hosts)
+    parts4 = [synth_batch(CFG, DataConfig(global_batch=8, seq_len=16,
+                                          num_hosts=4, host_id=h), step=3)
+              for h in range(4)]
+    merged4 = np.concatenate([p["tokens"] for p in parts4])
+    np.testing.assert_array_equal(merged4, full["tokens"])
+
+
+def test_data_targets_are_shifted_tokens():
+    d = DataConfig(global_batch=2, seq_len=16)
+    b = synth_batch(CFG, d, step=0)
+    # the pipeline emits (tokens, next-token targets) from one stream
+    assert b["tokens"].shape == b["targets"].shape == (2, 16)
+
+
+def test_prefetch_loader():
+    loader = PrefetchLoader(CFG, DataConfig(global_batch=2, seq_len=8),
+                            start_step=5)
+    step, batch = next(loader)
+    assert step == 5 and batch["tokens"].shape == (2, 8)
+    step2, _ = next(loader)
+    assert step2 == 6
+    loader.close()
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8,)))
+    params = {"w": jnp.zeros((8,))}
+    ocfg = OptConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                     weight_decay=0.0)
+    state = init_opt_state(ocfg, params)
+    for _ in range(150):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, m = apply_updates(ocfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+    assert m["grad_norm"] < 1.0
+
+
+def test_compressed_grads_error_feedback_converges():
+    target = jnp.asarray(np.random.default_rng(1).normal(size=(32,)))
+    params = {"w": jnp.zeros((32,))}
+    ocfg = OptConfig(lr=0.05, warmup_steps=5, total_steps=400,
+                     weight_decay=0.0, compress_grads=True)
+    state = init_opt_state(ocfg, params)
+    for _ in range(300):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = apply_updates(ocfg, params, grads, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.1)
+
+
+def test_lr_schedule():
+    ocfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_at(ocfg, 0)) < 2e-4
+    assert abs(float(lr_at(ocfg, 10)) - 1e-3) < 2e-4
+    assert float(lr_at(ocfg, 100)) < 1e-4

@@ -1,0 +1,153 @@
+"""HE MM system tests: transform diagonals (Eqs. 12–15), HLT schedule
+equivalence (baseline == hoisted == MO-HLT), Algorithm 2 end-to-end vs
+plaintext matmul, baselines, Table I op counts."""
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import hemm, hlt as hlt_mod
+from repro.core.ckks import CkksEngine
+from repro.core.hemm import (diag_count_formulas, plan_hemm, encrypt_matrix,
+                             decrypt_matrix, u_sigma, u_tau, u_eps, u_omega)
+from repro.core.params import toy_params
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return CkksEngine(toy_params(logN=6, L=4, k=3, beta=2, scale_bits=26))
+
+
+def _numeric_diag_count(U):
+    rows, cols = U.shape
+    return sum(
+        1 for z in range(-(rows - 1), cols)
+        if np.any(np.diagonal(U, offset=z) != 0))
+
+
+@pytest.mark.parametrize("mln", [(4, 3, 5), (4, 4, 4), (2, 4, 3), (3, 2, 3),
+                                 (5, 5, 2), (2, 5, 5), (8, 2, 2)])
+def test_diag_counts_match_eqs_12_15(mln):
+    m, l, n = mln
+    f = diag_count_formulas(m, l, n)
+    ex = hemm.diag_count_exact(m, l, n)
+    # σ/τ (Eqs. 12–13): exact everywhere
+    assert _numeric_diag_count(u_sigma(m, l)) == f["sigma"] == ex["sigma"]
+    assert _numeric_diag_count(u_tau(l, n)) == f["tau"] == ex["tau"]
+    for k in range(l):
+        assert _numeric_diag_count(u_eps(k, m, l, n)) == ex["eps"][k]
+        assert _numeric_diag_count(u_omega(k, m, l, n)) == ex["omega"][k]
+    # Eq. 14 exact when l | n (±1 otherwise — reproduction note in hemm.py)
+    if n % l == 0:
+        assert max(ex["eps"]) == f["eps"]
+    else:
+        assert max(ex["eps"]) <= f["eps"] + 1
+    # Eq. 15: exact for m == l (d=2); an upper bound otherwise
+    if m == l:
+        assert max(ex["omega"]) == 2 == f["omega"]
+    else:
+        assert max(ex["omega"]) <= f["omega"]
+
+
+def test_transforms_implement_eq1():
+    """Σ_k (ε^k σA) ⊙ (ω^k τB) == A·B on plain vectors (Eq. 1)."""
+    rng = np.random.default_rng(0)
+    for (m, l, n) in [(4, 3, 5), (3, 3, 3), (2, 4, 3)]:
+        A = rng.normal(size=(m, l))
+        B = rng.normal(size=(l, n))
+        a = A.flatten(order="F")
+        b = B.flatten(order="F")
+        sa = u_sigma(m, l) @ a
+        tb = u_tau(l, n) @ b
+        acc = np.zeros(m * n)
+        for k in range(l):
+            acc += (u_eps(k, m, l, n) @ sa) * (u_omega(k, m, l, n) @ tb)
+        np.testing.assert_allclose(acc.reshape((m, n), order="F"), A @ B,
+                                   atol=1e-9)
+
+
+@pytest.fixture(scope="module")
+def mm_setup(eng):
+    rng = np.random.default_rng(7)
+    m, l, n = 4, 3, 5            # the paper's Fig. 1 example shape
+    plan = plan_hemm(eng, m, l, n)
+    keys = eng.keygen(rng, rot_steps=plan.rot_steps)
+    A = rng.uniform(-1, 1, size=(m, l))
+    B = rng.uniform(-1, 1, size=(l, n))
+    ctA = encrypt_matrix(eng, keys, A, rng)
+    ctB = encrypt_matrix(eng, keys, B, rng)
+    return dict(rng=rng, plan=plan, keys=keys, A=A, B=B, ctA=ctA, ctB=ctB)
+
+
+def test_hlt_schedules_bit_exact(eng, mm_setup):
+    """hoisted and MO (limb-outer) schedules are the same math — bit-exact."""
+    s = mm_setup
+    ds = s["plan"].ds_sigma
+    ct_h = hlt_mod.hlt(eng, s["ctA"], ds, s["keys"], schedule="hoisted")
+    ct_m = hlt_mod.hlt(eng, s["ctA"], ds, s["keys"], schedule="mo")
+    ct_m1 = hlt_mod.hlt(eng, s["ctA"], ds, s["keys"], schedule="mo",
+                        rotation_chunk=1)
+    np.testing.assert_array_equal(np.asarray(ct_h.c0), np.asarray(ct_m.c0))
+    np.testing.assert_array_equal(np.asarray(ct_h.c1), np.asarray(ct_m.c1))
+    np.testing.assert_array_equal(np.asarray(ct_m1.c0), np.asarray(ct_m.c0))
+
+
+def test_hlt_baseline_matches_within_noise(eng, mm_setup):
+    """Algorithm 1 (per-rotation KeySwitch) ≈ hoisted (different rounding)."""
+    s = mm_setup
+    ds = s["plan"].ds_sigma
+    ct_b = hlt_mod.hlt(eng, s["ctA"], ds, s["keys"], schedule="baseline")
+    ct_h = hlt_mod.hlt(eng, s["ctA"], ds, s["keys"], schedule="hoisted")
+    vb = eng.decrypt_decode(ct_b, s["keys"]).real
+    vh = eng.decrypt_decode(ct_h, s["keys"]).real
+    np.testing.assert_allclose(vb, vh, atol=1e-3)
+    # and both compute σ(A) correctly
+    sa = (u_sigma(4, 3) @ s["A"].flatten(order="F"))
+    np.testing.assert_allclose(vh[:12], sa, atol=1e-2)
+
+
+@pytest.mark.parametrize("schedule", ["mo", "hoisted"])
+def test_hemm_matches_plaintext(eng, mm_setup, schedule):
+    s = mm_setup
+    ct = hemm.hemm(eng, s["ctA"], s["ctB"], s["plan"], s["keys"],
+                   schedule=schedule)
+    got = decrypt_matrix(eng, s["keys"], ct, 4, 5)
+    np.testing.assert_allclose(got, s["A"] @ s["B"], atol=0.05)
+    assert ct.level == s["ctA"].level - 3   # Table I: depth 3
+
+
+def test_hemm_square(eng):
+    rng = np.random.default_rng(11)
+    m = l = n = 4
+    plan = plan_hemm(eng, m, l, n)
+    assert all(ds.d == 2 for ds in plan.ds_omega[1:])   # Eq. 15, m == l
+    keys = eng.keygen(rng, rot_steps=plan.rot_steps)
+    A = rng.uniform(-1, 1, size=(m, l))
+    B = rng.uniform(-1, 1, size=(l, n))
+    ct = hemm.hemm(eng, encrypt_matrix(eng, keys, A, rng),
+                   encrypt_matrix(eng, keys, B, rng), plan, keys)
+    np.testing.assert_allclose(decrypt_matrix(eng, keys, ct, m, n), A @ B,
+                               atol=0.05)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["e2dm-s", "e2dm-r", "huang", "hegmm-en"])
+def test_baselines_correct(eng, name):
+    rng = np.random.default_rng(13)
+    m, l, n = 3, 2, 3
+    A = rng.uniform(-1, 1, size=(m, l))
+    B = rng.uniform(-1, 1, size=(l, n))
+    kf = lambda steps: eng.keygen(rng, rot_steps=steps)
+    got, _plan = hemm.hemm_baseline(eng, name, A, B, kf, rng)
+    np.testing.assert_allclose(got, A @ B, atol=0.06)
+
+
+def test_table1_counts(eng, mm_setup):
+    from repro.core.costmodel import CostModel
+    cm = CostModel(eng.params)
+    counts = cm.table1_counts(4, 3, 5)
+    plan = mm_setup["plan"]
+    # planned rotations (incl. z=0 identity entries, as the paper counts)
+    planned = plan.total_rotations
+    assert planned <= counts["total"]["Rot"]
+    assert counts["total"]["Depth"] == 3
+    assert counts["total"]["Mult"] == 3

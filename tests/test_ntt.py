@@ -1,0 +1,88 @@
+"""NTT correctness: inversion, direct-evaluation convention, negacyclic
+convolution theorem, and mont-path equivalence."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro  # noqa: F401
+from repro.core import modmath as mm, ntt
+from repro.core.params import toy_params, get_context
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return get_context(toy_params(logN=5, L=2, k=1, beta=1))
+
+
+def _rand_poly(ctx, rng, shape=()):
+    M = len(ctx.moduli_host)
+    N = ctx.params.N
+    qs = np.asarray(ctx.moduli_host, dtype=np.uint64)[:, None]
+    return rng.integers(0, qs, size=shape + (M, N)).astype(np.uint32)
+
+
+def test_ntt_roundtrip(ctx):
+    rng = np.random.default_rng(0)
+    x = _rand_poly(ctx, rng, shape=(3,))
+    y = ntt.ntt(jnp.asarray(x), ctx.psi_brv, ctx.moduli)
+    z = ntt.intt(y, ctx.psi_inv_brv, ctx.n_inv, ctx.moduli)
+    np.testing.assert_array_equal(np.asarray(z), x)
+
+
+def test_ntt_convention_bit_reversed_eval(ctx):
+    """out[j] == a(ψ^(2·br(j)+1)) — the convention automorph tables rely on."""
+    rng = np.random.default_rng(1)
+    N = ctx.params.N
+    x = _rand_poly(ctx, rng)
+    out = np.asarray(ntt.ntt(jnp.asarray(x), ctx.psi_brv, ctx.moduli))
+    brv = mm.bit_reverse_indices(N)
+    for li, q in enumerate(ctx.moduli_host):
+        psi = None
+        # recover psi from the table: psi_brv[br(1)] = ψ^1
+        tab = np.asarray(ctx.psi_brv[li])
+        psi = int(tab[brv[1] if False else np.where(brv == 1)[0][0]])
+        # direct evaluation at ψ^(2r+1)
+        coeffs = x[li].astype(object)
+        for j in [0, 1, N // 2, N - 1]:
+            r = int(brv[j])
+            root = pow(psi, 2 * r + 1, q)
+            val = 0
+            for i in range(N):
+                val = (val + int(coeffs[i]) * pow(root, i, q)) % q
+            assert int(out[li, j]) == val, (li, j)
+
+
+def test_negacyclic_convolution(ctx):
+    """intt(ntt(a) ⊙ ntt(b)) == a*b mod (X^N+1, q)."""
+    rng = np.random.default_rng(2)
+    N = ctx.params.N
+    a = _rand_poly(ctx, rng)
+    b = _rand_poly(ctx, rng)
+    ea = ntt.ntt(jnp.asarray(a), ctx.psi_brv, ctx.moduli)
+    eb = ntt.ntt(jnp.asarray(b), ctx.psi_brv, ctx.moduli)
+    prod = mm.mulmod(ea, eb, ctx.moduli)
+    got = np.asarray(ntt.intt(prod, ctx.psi_inv_brv, ctx.n_inv, ctx.moduli))
+    for li, q in enumerate(ctx.moduli_host):
+        ref = np.zeros(N, dtype=object)
+        for i in range(N):
+            for j in range(N):
+                k = i + j
+                v = int(a[li, i]) * int(b[li, j])
+                if k >= N:
+                    ref[k - N] = (ref[k - N] - v) % q
+                else:
+                    ref[k] = (ref[k] + v) % q
+        np.testing.assert_array_equal(got[li], ref.astype(np.uint64).astype(np.uint32))
+
+
+def test_mont_ntt_matches_u64(ctx):
+    rng = np.random.default_rng(3)
+    x = _rand_poly(ctx, rng, shape=(2,))
+    want = ntt.ntt(jnp.asarray(x), ctx.psi_brv, ctx.moduli)
+    got = ntt.ntt_mont(jnp.asarray(x), ctx.psi_brv_mont, ctx.moduli_u32, ctx.qneg_inv)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # inverse path: n_inv in Montgomery form
+    n_inv_mont = mm.to_mont(ctx.n_inv, ctx.moduli_u32, ctx.qneg_inv, ctx.r2)
+    back = ntt.intt_mont(got, ctx.psi_inv_brv_mont, n_inv_mont,
+                         ctx.moduli_u32, ctx.qneg_inv)
+    np.testing.assert_array_equal(np.asarray(back), x)

@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro  # noqa: F401
+from repro.core import automorph, modmath as mm, ntt
+from repro.core.costmodel import CostModel
+from repro.core.hemm import diag_count_exact, diag_count_formulas, min_logN
+from repro.core.params import toy_params, get_context, HEParams
+from repro.core.rns import RnsTools
+
+CTX = get_context(toy_params(logN=5, L=3, k=2, beta=2))
+TOOLS = RnsTools(CTX)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 12), st.integers(1, 12))
+def test_diag_count_invariants(m, l, n):
+    """σ/τ formulas exact; ε within +1 of Eq.14; ω bounded by Eq.15; and the
+    total rotation count is what Table I's φ/ζ accounting assumes."""
+    f = diag_count_formulas(m, l, n)
+    ex = diag_count_exact(m, l, n)
+    assert f["sigma"] == ex["sigma"] == 2 * min(m, l) - 1
+    assert f["tau"] == ex["tau"] == 2 * min(n, l) - 1
+    assert max(ex["eps"]) <= f["eps"] + 1
+    assert max(ex["omega"]) <= max(f["omega"], 2)
+    if m == l and l > 1:    # l=1 has only the identity diagonal
+        assert max(ex["omega"]) == 2
+    assert min_logN(m, l, n) >= int(np.ceil(np.log2(2 * max(m * l, l * n,
+                                                            m * n))))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_baseconv_exact_vs_crt(data):
+    """BaseConv == big-int CRT re-reduction for the [0, D) representative,
+    up to the documented HPS float-correction slack: inputs within ~1e-9·D of
+    a multiple of D may convert to v ± D (bounded extra noise, standard)."""
+    S = (0, 1)
+    T = (2, 3, CTX.params.num_main)
+    qs = [CTX.moduli_host[i] for i in S]
+    qt = [CTX.moduli_host[i] for i in T]
+    D = qs[0] * qs[1]
+    vals = data.draw(st.lists(st.integers(0, D - 1), min_size=4, max_size=4))
+    N = CTX.params.N
+    xs = np.zeros((2, N), dtype=np.uint32)
+    for j, v in enumerate(vals):
+        xs[0, j] = v % qs[0]
+        xs[1, j] = v % qs[1]
+    out = np.asarray(TOOLS.base_conv(jnp.asarray(xs), S, T))
+    for j, v in enumerate(vals):
+        for r, t in enumerate(qt):
+            got = int(out[r, j])
+            ok = any(got == (v + mult * D) % t for mult in (0, -1, 1))
+            assert ok, (j, v, t, got)
+            if min(v, D - v) > D * 1e-8:      # away from the boundary: exact
+                assert got == v % t
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 15), st.integers(1, 15))
+def test_automorph_group_law(r1, r2):
+    """ψ_{g1}∘ψ_{g2} == ψ_{g1·g2 mod 2N} in the eval domain."""
+    N = CTX.params.N
+    g1 = automorph.galois_elt_rot(r1, N)
+    g2 = automorph.galois_elt_rot(r2, N)
+    g12 = (g1 * g2) % (2 * N)
+    rng = np.random.default_rng(r1 * 31 + r2)
+    x = jnp.asarray(rng.integers(0, 97, size=(1, N)).astype(np.uint32))
+    one = automorph.apply_eval(automorph.apply_eval(x, N, g2), N, g1)
+    two = automorph.apply_eval(x, N, g12)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(two))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 29), st.integers(0, 2 ** 29))
+def test_ntt_linearity(a_seed, b_seed):
+    rng = np.random.default_rng((a_seed, b_seed))
+    M = CTX.params.num_total
+    N = CTX.params.N
+    qs = np.asarray(CTX.moduli_host, np.uint64)[:, None]
+    a = rng.integers(0, qs, (M, N)).astype(np.uint32)
+    b = rng.integers(0, qs, (M, N)).astype(np.uint32)
+    s = mm.addmod(jnp.asarray(a), jnp.asarray(b), CTX.moduli)
+    lhs = ntt.ntt(s, CTX.psi_brv, CTX.moduli)
+    rhs = mm.addmod(ntt.ntt(jnp.asarray(a), CTX.psi_brv, CTX.moduli),
+                    ntt.ntt(jnp.asarray(b), CTX.psi_brv, CTX.moduli),
+                    CTX.moduli)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(11, 16), st.integers(4, 31), st.integers(1, 12),
+       st.integers(1, 3))
+def test_costmodel_invariants(logN, L, k, beta):
+    """Eq. 24 is always below Eq. 23; memory grows monotonically in N and L."""
+    if beta > L + 1:
+        return
+    p = HEParams("h", logN=logN, L=L, k=k, beta=beta)
+    cm = CostModel(p, "paper")
+    assert cm.m_mo_hlt < cm.m_hemm
+    assert cm.m_keyswitch < cm.m_rot < cm.m_hlt_s1 < cm.m_hlt_s2 < cm.m_hemm
+    p2 = HEParams("h2", logN=logN + 1, L=L, k=k, beta=beta)
+    assert CostModel(p2, "paper").m_hemm > cm.m_hemm
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1), st.integers(0, 2 ** 32 - 1),
+       st.integers(0, 2 ** 32 - 1))
+def test_mont_add_sub_roundtrip(a, b, qsel):
+    qs = [536870909, 998244353, 12289]
+    q = qs[qsel % 3]
+    a, b = a % q, b % q
+    qj = jnp.uint32(q)
+    s = mm.montadd(jnp.uint32(a), jnp.uint32(b), qj)
+    d = mm.montsub(s, jnp.uint32(b), qj)
+    assert int(d) == a
