@@ -6,8 +6,10 @@ quantity: counts, MB, speedups, ...). Sections:
   table1   — HE MM operation counts (paper Table I) for the Table III grid
   table2   — parameter sets + §III-B3 cost-model numbers (0.43/3.6 MB, ...)
   eq24     — MO-HLT on-chip requirement + reduction factor (Fig. 2 / Eq. 24)
-  fig6     — measured HLT/HE MM latency: baseline vs hoisted vs MO schedules
-             (CPU, reduced N) + the paper's FPGA speedups for reference
+  fig6     — measured HLT/HE MM latency: baseline vs hoisted vs MO vs fused
+             Pallas schedules (CPU, reduced N) + the paper's FPGA speedups
+  blockmm  — batched block MM (one fused pipeline over all ciphertext tiles)
+             vs the sequential tile loop, schedule="pallas"
   kernels  — Pallas kernel calls (interpret mode) vs jnp oracle
   roofline — §Roofline table from results/dryrun/*.json (if present)
 """
@@ -94,16 +96,48 @@ def bench_fig6_schedules():
                                          schedule="hoisted"), reps=1)
     us_mo, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys, schedule="mo"),
                   reps=3)
+    us_pl, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys, schedule="pallas"),
+                  reps=3)
     row("fig6/hlt/baseline", us_base, f"d={ds.d}")
     row("fig6/hlt/hoisted", us_hoist,
         f"speedup_vs_baseline={us_base / us_hoist:.2f}x")
     row("fig6/hlt/mo", us_mo,
         f"speedup_vs_baseline={us_base / us_mo:.2f}x")
+    row("fig6/hlt/pallas", us_pl,
+        f"speedup_vs_baseline={us_base / us_pl:.2f}x")
     us_mm, _ = _t(lambda: hemm(eng, ctA, ctB, plan, keys, schedule="mo"),
                   reps=1)
     row("fig6/hemm/8-8-8/mo", us_mm, "depth=3")
+    us_mmp, _ = _t(lambda: hemm(eng, ctA, ctB, plan, keys,
+                                schedule="pallas"), reps=1)
+    row("fig6/hemm/8-8-8/pallas", us_mmp,
+        f"depth=3;batched_step2;vs_mo={us_mm / us_mmp:.2f}x")
     row("fig6/paper/avg_speedup", None, "221x (FPGA, paper Fig. 6)")
     row("fig6/paper/max_speedup", None, "1337x (160-160-160 Set-C)")
+
+
+def bench_blockmm():
+    """Block MM across ciphertext tiles (paper §VI-D / abstract's large-scale
+    consecutive HE MM): sequential per-tile-pair hemm loop vs ONE batched
+    fused-HLT pipeline per stage, both schedule="pallas"."""
+    from repro.core.params import toy_params
+    from repro.secure import SecureMatmulEngine
+    rng = np.random.default_rng(0)
+    engine = SecureMatmulEngine(toy_params(logN=6, L=4, k=3, beta=2), tile=4,
+                                schedule="pallas")
+    A = rng.uniform(-1, 1, (6, 5))
+    B = rng.uniform(-1, 1, (5, 7))
+    engine.keygen(rng)
+    At = engine.encrypt_tiles(A, rng)
+    Bt = engine.encrypt_tiles(B, rng)
+    shape = f"{A.shape[0]}x{A.shape[1]}@{B.shape[1]}/tile{engine.tile}"
+    us_loop, _ = _t(lambda: engine.matmul_encrypted(At, Bt, batched=False),
+                    reps=1)
+    us_bat, _ = _t(lambda: engine.matmul_encrypted(At, Bt, batched=True),
+                   reps=1)
+    row(f"blockmm/{shape}/loop", us_loop, "sequential tile loop")
+    row(f"blockmm/{shape}/batched", us_bat,
+        f"speedup_vs_loop={us_loop / us_bat:.2f}x")
 
 
 def bench_kernels():
@@ -151,7 +185,7 @@ def main() -> None:
     import repro  # noqa: F401
     print("name,us_per_call,derived")
     sections = [bench_table1, bench_table2_costmodel, bench_fig6_schedules,
-                bench_kernels, bench_roofline]
+                bench_blockmm, bench_kernels, bench_roofline]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     for fn in sections:
         if only and only not in fn.__name__:

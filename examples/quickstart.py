@@ -25,7 +25,9 @@ B = rng.uniform(-1, 1, (l, n))
 ctA = encrypt_matrix(eng, keys, A, rng)   # both inputs encrypted
 ctB = encrypt_matrix(eng, keys, B, rng)
 
-ctC = hemm(eng, ctA, ctB, plan, keys, schedule="mo")   # MO-HLT datapath
+# schedule="pallas": the fused MO-HLT kernel datapath with batched Step-1/2
+# pipelines; "mo"/"hoisted"/"baseline" run the u64 reference schedules.
+ctC = hemm(eng, ctA, ctB, plan, keys, schedule="pallas")
 C = decrypt_matrix(eng, keys, ctC, m, n)
 
 err = np.abs(C - A @ B).max()

@@ -17,7 +17,10 @@ d_in, d_hidden, d_out = 6, 8, 4
 W1 = rng.normal(size=(d_in, d_hidden)) * 0.5
 W2 = rng.normal(size=(d_hidden, d_out)) * 0.5
 
-engine = SecureMatmulEngine(toy_params(logN=7, L=4, k=3, beta=2), tile=4)
+# schedule="pallas" drives the fused MO-HLT kernel datapath and batches the
+# block-MM tile HLTs into single fused-kernel pipelines (core/hlt.py).
+engine = SecureMatmulEngine(toy_params(logN=7, L=4, k=3, beta=2), tile=4,
+                            schedule="pallas")
 head = SecureLinear(engine, W2, rng)     # W2 leaves the owner encrypted
 
 x = rng.normal(size=(4, d_in))           # a batch of 4 activations

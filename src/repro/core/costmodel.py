@@ -17,6 +17,28 @@ from repro.core.hemm import diag_count_formulas
 
 MB = float(1 << 20)
 
+# Per-core TPU VMEM (the FPGA scratchpad analogue; pallas guide: ~16 MB/core).
+VMEM_BYTES = 16.0 * MB
+
+
+def pick_rotation_chunk(params: "HEParams", nbeta: int | None = None,
+                        vmem_bytes: float = VMEM_BYTES,
+                        headroom: float = 0.75) -> int:
+    """Largest rotation chunk whose fused-HLT per-grid-step working set
+    (kernels/fused_hlt.py docstring) fits the per-core VMEM budget.
+
+    Per grid step the kernel keeps resident β digit rows + c0e/c1e + the two
+    accumulator rows, and streams per rotation: one diagonal row, one perm
+    table row (i32 — same bytes as a u32 limb row) and 2β rot-key rows.
+    Each row is N u32 coefficients (4 bytes).
+    """
+    nbeta = params.beta if nbeta is None else nbeta
+    row = 4.0 * params.N
+    budget_rows = headroom * vmem_bytes / row
+    resident = nbeta + 4
+    per_rotation = 2 * nbeta + 2
+    return max(1, int((budget_rows - resident) // per_rotation))
+
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:

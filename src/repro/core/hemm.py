@@ -152,8 +152,18 @@ def decrypt_matrix(eng: CkksEngine, keys: Keys, ct: Ciphertext,
 
 def hemm(eng: CkksEngine, ctA: Ciphertext, ctB: Ciphertext, plan: HeMMPlan,
          keys: Keys, schedule: str = "mo",
-         rotation_chunk: Optional[int] = None) -> Ciphertext:
-    """Algorithm 2. Consumes 3 levels (2 HLTs + 1 Mult·Rescale); L >= 4."""
+         rotation_chunk: Optional[int] = None,
+         batched: Optional[bool] = None) -> Ciphertext:
+    """Algorithm 2. Consumes 3 levels (2 HLTs + 1 Mult·Rescale); L >= 4.
+
+    ``batched`` (default: on for schedule="pallas") runs Step 1 as one batched
+    HLT over {σ(A), τ(B)} and Step 2's 2·l HLTs as ONE batched fused-kernel
+    pipeline (hlt_batched) instead of 2·l sequential launches."""
+    if batched is None:
+        batched = schedule == "pallas"
+    if batched and schedule != "baseline":
+        return _hemm_batched(eng, ctA, ctB, plan, keys, schedule,
+                             rotation_chunk)
     H = lambda ct, ds, hst=None: hlt_mod.hlt(
         eng, ct, ds, keys, schedule=schedule, rotation_chunk=rotation_chunk,
         hoisted=hst)
@@ -168,6 +178,25 @@ def hemm(eng: CkksEngine, ctA: Ciphertext, ctB: Ciphertext, plan: HeMMPlan,
         ctAk = H(ctA0, plan.ds_eps[k], hstA)
         ctBk = H(ctB0, plan.ds_omega[k], hstB)
         prod = eng.rescale(eng.mult(ctAk, ctBk, keys))
+        acc = prod if acc is None else eng.add(acc, prod)
+    return acc
+
+
+def _hemm_batched(eng: CkksEngine, ctA: Ciphertext, ctB: Ciphertext,
+                  plan: HeMMPlan, keys: Keys, schedule: str,
+                  rotation_chunk: Optional[int]) -> Ciphertext:
+    """Algorithm 2 with both steps as batched HLT pipelines."""
+    ctA0, ctB0 = hlt_mod.hlt_batched(
+        eng, [(ctA, plan.ds_sigma), (ctB, plan.ds_tau)], keys,
+        schedule=schedule, rotation_chunk=rotation_chunk)
+    hstA, hstB = hoist(eng, ctA0), hoist(eng, ctB0)
+    items = ([(hstA, plan.ds_eps[k]) for k in range(plan.l)]
+             + [(hstB, plan.ds_omega[k]) for k in range(plan.l)])
+    cts = hlt_mod.hlt_batched(eng, items, keys, schedule=schedule,
+                              rotation_chunk=rotation_chunk)
+    acc: Optional[Ciphertext] = None
+    for k in range(plan.l):
+        prod = eng.rescale(eng.mult(cts[k], cts[plan.l + k], keys))
         acc = prod if acc is None else eng.add(acc, prod)
     return acc
 

@@ -1,6 +1,6 @@
 """Homomorphic Linear Transformation — the paper's bottleneck and contribution.
 
-Three schedules, mathematically equivalent (verified bit-exactly in tests):
+Four schedules, mathematically equivalent (verified bit-exactly in tests):
 
 * ``baseline``  — Algorithm 1 / Fig. 2(A): coarse-grained rotation loop; every
   Rot runs a full KeySwitch (Decomp→ModUp→KeyIP→ModDown per rotation), and a
@@ -11,12 +11,22 @@ Three schedules, mathematically equivalent (verified bit-exactly in tests):
   and ONE merged ModDown+Rescale (PQ_ℓ → Q_{ℓ-1}) finishes the HLT.
 
 * ``mo``        — MO-HLT / Fig. 2(B): same math as ``hoisted`` with the loop
-  order inverted — **limb outer, rotation inner** — expressed as a lax.scan
-  over the extended limb axis. Per-limb working set is (β+1) limb rows
-  (Eq. 24) when rotation_chunk=1. On TPU this schedule is realized by the
-  fused Pallas kernel (kernels/fused_hlt.py) with a grid over limbs, and by
-  limb-parallel sharding at the distributed level (BaseConv is the only
-  limb-coupling stage, hence the only collective).
+  order inverted — **limb outer, rotation inner** — expressed as a lax.map
+  over the extended limb axis on the u64 reference datapath. Per-limb working
+  set is (β+1) limb rows (Eq. 24) when rotation_chunk=1.
+
+* ``pallas``    — the same limb-outer schedule driven through the fused
+  Automorph→KeyIP→DiagIP Pallas kernel (kernels/fused_hlt.py) on the u32
+  Montgomery datapath: rotation keys and diagonal plaintexts are converted to
+  the Montgomery domain once per (level, DiagSet) and cached on the DiagSet,
+  d is padded up to a rotation-chunk multiple with zero-diagonal identity
+  entries, and the chunk defaults to the cost model's VMEM budget
+  (core/costmodel.py pick_rotation_chunk). Bit-exact vs ``mo``/``hoisted``.
+  ``hlt_batched`` stacks a leading ciphertext axis so many HLTs (the 2·l
+  Step-2 HLTs of hemm, or the tile HLTs of block MM) run as ONE kernel
+  pipeline sharing the precompute. Limb-parallel sharding at the distributed
+  level rides the same schedule (BaseConv is the only limb-coupling stage,
+  hence the only collective).
 
 The a-part (c0) is "scale-raised" into PQ_ℓ (multiply by [P]_{q_i}, zero on
 special limbs) so DiagIP can accumulate both output polys in the extended
@@ -172,6 +182,9 @@ def _perm_table(eng: CkksEngine, zs) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+SCHEDULES = ("baseline", "hoisted", "mo", "pallas")
+
+
 def hlt(eng: CkksEngine, ct: Ciphertext, diags: DiagSet, keys: Keys,
         schedule: str = "mo", rotation_chunk: Optional[int] = None,
         hoisted: Optional[Hoisted] = None) -> Ciphertext:
@@ -183,7 +196,41 @@ def hlt(eng: CkksEngine, ct: Ciphertext, diags: DiagSet, keys: Keys,
         return _hlt_hoisted(eng, hst, diags, keys)
     if schedule == "mo":
         return _hlt_mo(eng, hst, diags, keys, rotation_chunk)
+    if schedule == "pallas":
+        return _hlt_pallas(eng, hst, diags, keys, rotation_chunk)
     raise ValueError(schedule)
+
+
+def hlt_batched(eng: CkksEngine, items: Sequence, keys: Keys,
+                schedule: str = "pallas",
+                rotation_chunk: Optional[int] = None) -> list:
+    """Apply many HLTs as ONE batched pipeline.
+
+    ``items`` is a sequence of ``(ct_or_hoisted, DiagSet)`` pairs, all at the
+    same level. Under ``schedule="pallas"`` the hoisting products are stacked
+    along a leading ciphertext axis and every (Automorph→KeyIP→DiagIP) runs in
+    a single fused kernel launch sharing one Montgomery key/diagonal
+    precompute (diagonal sets are padded to a common rotation count); the
+    merged ModDown+Rescale is vmapped over the batch. Other schedules fall
+    back to a loop of single-ciphertext ``hlt`` calls (same results —
+    bit-exact for mo/hoisted; used as the oracle in tests).
+
+    Returns a list of Ciphertexts, one per item, in order.
+    """
+    if schedule == "baseline":
+        assert all(not isinstance(it, Hoisted) for it, _ in items), \
+            "schedule='baseline' has no hoisting product; pass Ciphertexts"
+        return [hlt(eng, ct, ds, keys, schedule="baseline")
+                for ct, ds in items]
+    items = [(it if isinstance(it, Hoisted) else hoist(eng, it), ds)
+             for (it, ds) in items]
+    levels = {h.level for h, _ in items}
+    assert len(levels) == 1, f"hlt_batched needs one common level, got {levels}"
+    if schedule != "pallas":
+        return [hlt(eng, None, ds, keys, schedule=schedule,
+                    rotation_chunk=rotation_chunk, hoisted=h)
+                for h, ds in items]
+    return _hlt_pallas_batched(eng, items, keys, rotation_chunk)
 
 
 def _hlt_baseline(eng: CkksEngine, ct, diags: DiagSet, keys: Keys) -> Ciphertext:
@@ -326,3 +373,133 @@ def _hlt_mo(eng: CkksEngine, hst: Hoisted, diags: DiagSet, keys: Keys,
 def _reduce_add(x, q):
     """Sum (c, N) mod q along axis 0 in u64 (c·q < 2^63 safe)."""
     return (jnp.sum(x.astype(jnp.uint64), axis=0) % q).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# pallas schedule: fused kernel wiring + batched pipeline
+# ---------------------------------------------------------------------------
+
+
+def _pick_chunk(eng: CkksEngine, nbeta: int, d: int,
+                rotation_chunk: Optional[int]) -> int:
+    """Rotation chunk from the VMEM budget (cost model) unless forced."""
+    if rotation_chunk is None:
+        from repro.core.costmodel import pick_rotation_chunk
+        rotation_chunk = pick_rotation_chunk(eng.params, nbeta=nbeta)
+    return max(1, min(rotation_chunk, d))
+
+
+def _pallas_operands(eng: CkksEngine, diags: DiagSet, keys: Keys, level: int,
+                     nbeta: int, d_pad: int):
+    """Montgomery-domain kernel operands for one DiagSet, padded to d_pad
+    rotations. Cached on the DiagSet (the per-(engine, level, DiagSet)
+    precompute): conversion of rot keys + diagonals to the Montgomery domain
+    happens once and is shared by every HLT over this DiagSet.
+
+    Padding entries are identity rotations (perm = arange) with zero diagonal
+    and is_id=1, so they bypass KeyIP and contribute exactly zero to DiagIP.
+    """
+    cache = diags.__dict__.setdefault("_pallas_cache", {})
+    key = (level, nbeta, d_pad)
+    hit = cache.get(key)
+    # Identity (not id()) check on engine AND keys: after a re-keygen the old
+    # Keys object's id can be recycled, which must not serve stale rot keys.
+    if hit is not None and hit[0] is eng and hit[1] is keys:
+        return hit[2]
+    p = eng.params
+    full = eng.tools.digit_bases(level)[0][2]
+    rows = np.asarray(full)
+    view = eng.basis(full)
+    q32, qneg, r2 = view.moduli_u32, view.qneg_inv, view.r2
+    rk0, rk1 = _gather_keys(eng, keys, diags.zs, nbeta, full)  # (d, β', M, N)
+    u_all = diags.pt[:, rows]                                  # (d, M, N)
+    u_m = mm.to_mont(u_all, q32, qneg, r2)
+    rk0_m = mm.to_mont(rk0, q32, qneg, r2)
+    rk1_m = mm.to_mont(rk1, q32, qneg, r2)
+    perms = _perm_table(eng, diags.zs).astype(np.int32)        # (d, N)
+    is_id = np.array([[1 if z == 0 else 0] for z in diags.zs], np.int32)
+    d = diags.d
+    if d_pad > d:
+        pad = d_pad - d
+        M = len(full)
+        u_m = jnp.concatenate(
+            [u_m, jnp.zeros((pad, M, p.N), jnp.uint32)], axis=0)
+        zk = jnp.zeros((pad, nbeta, M, p.N), jnp.uint32)
+        rk0_m = jnp.concatenate([rk0_m, zk], axis=0)
+        rk1_m = jnp.concatenate([rk1_m, zk], axis=0)
+        perms = np.concatenate(
+            [perms, np.tile(np.arange(p.N, dtype=np.int32), (pad, 1))], axis=0)
+        is_id = np.concatenate([is_id, np.ones((pad, 1), np.int32)], axis=0)
+    out = (u_m, rk0_m, rk1_m, jnp.asarray(perms), jnp.asarray(is_id))
+    cache[key] = (eng, keys, out)
+    return out
+
+
+_PALLAS_JIT_CACHE: dict = {}
+
+
+def _pallas_pipeline(eng: CkksEngine, level: int, nbeta: int, d_pad: int,
+                     chunk: int, batch: Optional[int]):
+    """Cached jitted fused-kernel pipeline incl. merged ModDown+Rescale.
+    batch=None -> single-ciphertext kernel; batch=B -> batched kernel with a
+    vmapped ModDown over the leading ciphertext axis."""
+    key = (id(eng), level, nbeta, d_pad, chunk, batch)
+    fn = _PALLAS_JIT_CACHE.get(key)
+    if fn is not None:
+        return fn
+    from repro.kernels import ops
+    full = eng.tools.digit_bases(level)[0][2]
+    view = eng.basis(full)
+    q32, qneg = view.moduli_u32, view.qneg_inv
+
+    def single(digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id):
+        a0, a1 = ops.fused_hlt(digits, c0e, c1e, u_m, rk0_m, rk1_m,
+                               perms, is_id, q32, qneg, chunk=chunk)
+        return (eng._mod_down_eval(a0, level, drop_last=True),
+                eng._mod_down_eval(a1, level, drop_last=True))
+
+    def batched(digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id):
+        a0, a1 = ops.fused_hlt_batched(digits, c0e, c1e, u_m, rk0_m, rk1_m,
+                                       perms, is_id, q32, qneg, chunk=chunk)
+        down = jax.vmap(lambda a: eng._mod_down_eval(a, level, drop_last=True))
+        return down(a0), down(a1)
+
+    fn = jax.jit(single if batch is None else batched)
+    _PALLAS_JIT_CACHE[key] = fn
+    return fn
+
+
+def _hlt_pallas(eng: CkksEngine, hst: Hoisted, diags: DiagSet, keys: Keys,
+                rotation_chunk: Optional[int]) -> Ciphertext:
+    """Limb-outer schedule through the fused Pallas kernel (u32 Montgomery)."""
+    nbeta = hst.digits.shape[0]
+    chunk = _pick_chunk(eng, nbeta, diags.d, rotation_chunk)
+    d_pad = -(-diags.d // chunk) * chunk
+    ops_ = _pallas_operands(eng, diags, keys, hst.level, nbeta, d_pad)
+    fn = _pallas_pipeline(eng, hst.level, nbeta, d_pad, chunk, batch=None)
+    c0, c1 = fn(hst.digits, hst.c0_ext, hst.c1_ext, *ops_)
+    q_ell = eng.ctx.moduli_host[hst.level]
+    return Ciphertext(c0, c1, hst.level - 1,
+                      hst.scale * diags.scale / q_ell)
+
+
+def _hlt_pallas_batched(eng: CkksEngine, items, keys: Keys,
+                        rotation_chunk: Optional[int]) -> list:
+    """One fused-kernel launch over a stacked leading ciphertext axis."""
+    level = items[0][0].level
+    nbeta = items[0][0].digits.shape[0]
+    d_max = max(ds.d for _, ds in items)
+    chunk = _pick_chunk(eng, nbeta, d_max, rotation_chunk)
+    d_pad = -(-d_max // chunk) * chunk
+    per = [_pallas_operands(eng, ds, keys, level, nbeta, d_pad)
+           for _, ds in items]
+    digits = jnp.stack([h.digits for h, _ in items])
+    c0e = jnp.stack([h.c0_ext for h, _ in items])
+    c1e = jnp.stack([h.c1_ext for h, _ in items])
+    stacked = [jnp.stack([p[i] for p in per]) for i in range(5)]
+    fn = _pallas_pipeline(eng, level, nbeta, d_pad, chunk, batch=len(items))
+    c0b, c1b = fn(digits, c0e, c1e, *stacked)
+    q_ell = eng.ctx.moduli_host[level]
+    return [Ciphertext(c0b[b], c1b[b], level - 1,
+                       h.scale * ds.scale / q_ell)
+            for b, (h, ds) in enumerate(items)]

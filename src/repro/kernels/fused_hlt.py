@@ -11,8 +11,16 @@ plus the tile of per-rotation operands.
 
 VMEM budget per grid step (N=2^16, β=3, chunk=8):
   digits 3·256K + rk 2·8·3·256K + u 8·256K + perms 8·256K + acc 2·256K ≈ 17 MB.
-Chunk is chosen from the cost model so this fits the per-core VMEM budget
-(configs/fame_sets.py scratchpad analogue).
+Chunk is chosen from the cost model (core/costmodel.py pick_rotation_chunk)
+so this fits the per-core VMEM budget (configs/fame_sets.py scratchpad
+analogue); core/hlt.py pads d up to a chunk multiple before calling.
+
+Two entry points:
+  * fused_hlt         — one ciphertext, grid (limbs, rot-chunks).
+  * fused_hlt_batched — a stacked leading ciphertext axis, grid
+    (batch, limbs, rot-chunks); rotation operands are per-batch-element so
+    many HLTs (different hoisted cts AND different diagonal sets) run as one
+    pipeline — the "large-scale consecutive HE MM" workload.
 """
 from __future__ import annotations
 
@@ -23,6 +31,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import modmath as mm
+
+
+def _rot_chunk_body(a0, a1, dig, c0e, c1e, u, rk0, rk1, perms, ids, q, qneg,
+                    *, nbeta: int, chunk: int):
+    """Shared rotation-inner loop: dig (β, N) resident; u/perms (chunk, N);
+    rk0/rk1 (chunk, β, N); ids (chunk,). Returns updated (a0, a1)."""
+    for r in range(chunk):                       # rotation-inner loop
+        pm = perms[r, :]
+        dig_rot = jnp.take(dig, pm, axis=-1)     # Automorph (VMEM gather)
+        c0r = jnp.take(c0e, pm, axis=-1)
+        k0 = jnp.zeros_like(c0e)
+        k1 = jnp.zeros_like(c1e)
+        for j in range(nbeta):                   # KeyIP
+            k0 = mm.montadd(k0, mm.montmul(dig_rot[j], rk0[r, j], q, qneg), q)
+            k1 = mm.montadd(k1, mm.montmul(dig_rot[j], rk1[r, j], q, qneg), q)
+        is_id = ids[r] != 0                      # z=0: bypass KeyIP
+        t0 = jnp.where(is_id, c0e, mm.montadd(k0, c0r, q))
+        t1 = jnp.where(is_id, c1e, k1)
+        u_r = u[r, :]
+        a0 = mm.montadd(a0, mm.montmul(u_r, t0, q, qneg), q)   # DiagIP
+        a1 = mm.montadd(a1, mm.montmul(u_r, t1, q, qneg), q)
+    return a0, a1
 
 
 def _fused_kernel(dig_ref, c0e_ref, c1e_ref, u_ref, rk0_ref, rk1_ref,
@@ -40,25 +70,10 @@ def _fused_kernel(dig_ref, c0e_ref, c1e_ref, u_ref, rk0_ref, rk1_ref,
         a0_ref[0, :] = jnp.zeros_like(c0e)
         a1_ref[0, :] = jnp.zeros_like(c1e)
 
-    a0 = a0_ref[0, :]
-    a1 = a1_ref[0, :]
-    for r in range(chunk):                       # rotation-inner loop
-        pm = perm_ref[r, :]
-        dig_rot = jnp.take(dig, pm, axis=-1)     # Automorph (VMEM gather)
-        c0r = jnp.take(c0e, pm, axis=-1)
-        k0 = jnp.zeros_like(c0e)
-        k1 = jnp.zeros_like(c1e)
-        for j in range(nbeta):                   # KeyIP
-            k0 = mm.montadd(k0, mm.montmul(dig_rot[j], rk0_ref[r, j, 0, :],
-                                           q, qneg), q)
-            k1 = mm.montadd(k1, mm.montmul(dig_rot[j], rk1_ref[r, j, 0, :],
-                                           q, qneg), q)
-        is_id = id_ref[r, 0] != 0                # z=0: bypass KeyIP
-        t0 = jnp.where(is_id, c0e, mm.montadd(k0, c0r, q))
-        t1 = jnp.where(is_id, c1e, k1)
-        u = u_ref[r, 0, :]
-        a0 = mm.montadd(a0, mm.montmul(u, t0, q, qneg), q)   # DiagIP
-        a1 = mm.montadd(a1, mm.montmul(u, t1, q, qneg), q)
+    a0, a1 = _rot_chunk_body(
+        a0_ref[0, :], a1_ref[0, :], dig, c0e, c1e,
+        u_ref[:, 0, :], rk0_ref[:, :, 0, :], rk1_ref[:, :, 0, :],
+        perm_ref[...], id_ref[:, 0], q, qneg, nbeta=nbeta, chunk=chunk)
     a0_ref[0, :] = a0
     a1_ref[0, :] = a1
 
@@ -90,5 +105,61 @@ def fused_hlt(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id, q32, qneg, *,
         out_specs=[out_s, out_s],
         out_shape=[jax.ShapeDtypeStruct((M, N), jnp.uint32),
                    jax.ShapeDtypeStruct((M, N), jnp.uint32)],
+        interpret=interpret,
+    )(digits, c0e, c1e, u_mont, rk0, rk1, perms, q32, qneg, is_id)
+
+
+def _fused_kernel_batched(dig_ref, c0e_ref, c1e_ref, u_ref, rk0_ref, rk1_ref,
+                          perm_ref, q_ref, qneg_ref, id_ref, a0_ref, a1_ref, *,
+                          nbeta: int, chunk: int):
+    rblk = pl.program_id(2)
+    q = q_ref[0, 0]
+    qneg = qneg_ref[0, 0]
+    dig = dig_ref[0, :, 0, :]                    # (β, N) resident
+    c0e = c0e_ref[0, 0, :]
+    c1e = c1e_ref[0, 0, :]
+
+    @pl.when(rblk == 0)
+    def _init():
+        a0_ref[0, 0, :] = jnp.zeros_like(c0e)
+        a1_ref[0, 0, :] = jnp.zeros_like(c1e)
+
+    a0, a1 = _rot_chunk_body(
+        a0_ref[0, 0, :], a1_ref[0, 0, :], dig, c0e, c1e,
+        u_ref[0, :, 0, :], rk0_ref[0, :, :, 0, :], rk1_ref[0, :, :, 0, :],
+        perm_ref[0], id_ref[0, :, 0], q, qneg, nbeta=nbeta, chunk=chunk)
+    a0_ref[0, 0, :] = a0
+    a1_ref[0, 0, :] = a1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def fused_hlt_batched(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id, q32,
+                      qneg, *, chunk: int = 8, interpret: bool = True):
+    """Batched fused HLT: leading ciphertext axis B over everything except the
+    per-limb constants. digits: (B, β, M, N); c0e/c1e: (B, M, N);
+    u_mont: (B, d, M, N); rk0/rk1: (B, d, β, M, N); perms: (B, d, N) i32;
+    is_id: (B, d, 1) i32. Returns (acc0, acc1): (B, M, N)."""
+    B, nbeta, M, N = digits.shape
+    d = u_mont.shape[1]
+    chunk = min(chunk, d)
+    assert d % chunk == 0, (d, chunk)
+    grid = (B, M, d // chunk)
+    dig_s = pl.BlockSpec((1, nbeta, 1, N), lambda b, i, r: (b, 0, i, 0))
+    vec_s = pl.BlockSpec((1, 1, N), lambda b, i, r: (b, i, 0))
+    u_s = pl.BlockSpec((1, chunk, 1, N), lambda b, i, r: (b, r, i, 0))
+    rk_s = pl.BlockSpec((1, chunk, nbeta, 1, N),
+                        lambda b, i, r: (b, r, 0, i, 0))
+    pm_s = pl.BlockSpec((1, chunk, N), lambda b, i, r: (b, r, 0))
+    id_s = pl.BlockSpec((1, chunk, 1), lambda b, i, r: (b, r, 0))
+    c_s = pl.BlockSpec((1, 1), lambda b, i, r: (i, 0))
+    out_s = pl.BlockSpec((1, 1, N), lambda b, i, r: (b, i, 0))
+    return pl.pallas_call(
+        functools.partial(_fused_kernel_batched, nbeta=nbeta, chunk=chunk),
+        grid=grid,
+        in_specs=[dig_s, vec_s, vec_s, u_s, rk_s, rk_s, pm_s, c_s, c_s, id_s],
+        out_specs=[out_s, out_s],
+        out_shape=[jax.ShapeDtypeStruct((B, M, N), jnp.uint32),
+                   jax.ShapeDtypeStruct((B, M, N), jnp.uint32)],
         interpret=interpret,
     )(digits, c0e, c1e, u_mont, rk0, rk1, perms, q32, qneg, is_id)

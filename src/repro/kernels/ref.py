@@ -33,6 +33,15 @@ def fused_hlt_ref(digits, c0e, c1e, u_mont, rk0, rk1, perms, q32, qneg,
 
     digits: (β, M, N); c0e/c1e: (M, N); u_mont: (d, M, N);
     rk0/rk1: (d, β, M, N); perms: (d, N). Returns acc0, acc1 (M, N)."""
+    is_id = [t == id_idx for t in range(rk0.shape[0])]
+    return fused_hlt_masked_ref(digits, c0e, c1e, u_mont, rk0, rk1, perms,
+                                is_id, q32, qneg)
+
+
+def fused_hlt_masked_ref(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id,
+                         q32, qneg):
+    """fused_hlt oracle with an is_id mask vector (d,) instead of one index —
+    matches the kernel semantics exactly (any number of z=0/padded entries)."""
     d, nb = rk0.shape[0], rk0.shape[1]
     acc0 = jnp.zeros_like(c0e)
     acc1 = jnp.zeros_like(c1e)
@@ -47,13 +56,23 @@ def fused_hlt_ref(digits, c0e, c1e, u_mont, rk0, rk1, perms, q32, qneg,
                             q32)
             k1 = mm.montadd(k1, mm.montmul(dig_rot[j], rk1[t, j], q32, qneg),
                             q32)
-        if t == id_idx:
+        if bool(is_id[t]):
             t0, t1 = c0e, c1e
         else:
             t0, t1 = mm.montadd(k0, c0r, q32), k1
         acc0 = mm.montadd(acc0, mm.montmul(u_mont[t], t0, q32, qneg), q32)
         acc1 = mm.montadd(acc1, mm.montmul(u_mont[t], t1, q32, qneg), q32)
     return acc0, acc1
+
+
+def fused_hlt_batched_ref(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id,
+                          q32, qneg):
+    """Batched oracle: loop of single-ciphertext fused HLTs (leading axis B)."""
+    outs = [fused_hlt_masked_ref(digits[b], c0e[b], c1e[b], u_mont[b],
+                                 rk0[b], rk1[b], perms[b], is_id[b, :, 0],
+                                 q32, qneg)
+            for b in range(digits.shape[0])]
+    return (jnp.stack([o[0] for o in outs]), jnp.stack([o[1] for o in outs]))
 
 
 def baseconv_ref(x, hat_inv_m, W_m, D_mod_m, inv_d, q_own, qneg_own, q_gen,

@@ -7,7 +7,10 @@ HE MM (Algorithm 2). This module provides:
 * SecureMatmulEngine — block-MM driver: partitions an arbitrary (m × l)·(l × n)
   matmul into tiles that fit one ciphertext each (paper §VI-D: "the block MM
   approach encrypting a matrix with multiple Cts"), runs Algorithm 2 per tile
-  pair with hoisting reuse, and accumulates ciphertext partial sums.
+  pair with hoisting reuse, and accumulates ciphertext partial sums. Under
+  schedule="pallas" the whole tile grid runs as a few batched fused-kernel
+  pipelines (core/hlt.py hlt_batched) instead of a sequential Python loop of
+  single-ciphertext hemm calls — each tile is σ/τ-transformed exactly once.
 
 * SecureLinear — a drop-in linear layer: plaintext fast path for training,
   encrypted path for secure inference on layers flagged in
@@ -27,6 +30,7 @@ import numpy as np
 from repro.core import hemm as hemm_mod
 from repro.core.ckks import CkksEngine, Ciphertext, Keys
 from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix, hemm
+from repro.core.hlt import hoist, hlt_batched
 from repro.core.params import HEParams, toy_params
 
 
@@ -35,12 +39,16 @@ class SecureMatmulEngine:
     params: HEParams
     tile: int = 8                 # tile edge (tile² ≤ slots; paper: single-Ct MM)
     schedule: str = "mo"
+    rotation_chunk: Optional[int] = None
+    batched: Optional[bool] = None   # default: batched iff schedule == "pallas"
 
     def __post_init__(self):
         self.eng = CkksEngine(self.params)
         assert 3 * self.tile * self.tile <= 2 * self.eng.params.slots
         self._plan = plan_hemm(self.eng, self.tile, self.tile, self.tile)
         self._keys: Optional[Keys] = None
+        if self.batched is None:
+            self.batched = self.schedule == "pallas"
 
     def keygen(self, rng: np.random.Generator) -> Keys:
         self._keys = self.eng.keygen(rng, rot_steps=self._plan.rot_steps)
@@ -59,11 +67,26 @@ class SecureMatmulEngine:
                                                         j * t:(j + 1) * t], rng)
                  for j in range(gn)] for i in range(gm)]
 
-    def matmul_encrypted(self, A_tiles, B_tiles) -> list:
-        """Block MM over ciphertext tiles: C[i][j] = Σ_k A[i][k]·B[k][j]."""
+    def matmul_encrypted(self, A_tiles, B_tiles,
+                         batched: Optional[bool] = None) -> list:
+        """Block MM over ciphertext tiles: C[i][j] = Σ_k A[i][k]·B[k][j].
+
+        batched=False — the sequential tile loop: one full Algorithm-2 hemm
+        per (i, j, k) tile pair (σ(A[i][k]) is recomputed for every j and
+        τ(B[k][j]) for every i).
+
+        batched=True — the whole block MM as a handful of batched HLT
+        pipelines: ONE launch σ/τ-transforms every tile exactly once, then
+        each of the l Step-2 iterations transforms every A0/B0 tile in ONE
+        launch, all sharing one Montgomery key/diagonal precompute
+        (the paper's "large-scale consecutive HE MM" workload)."""
+        if batched is None:
+            batched = self.batched
         gm, gl = len(A_tiles), len(A_tiles[0])
         gn = len(B_tiles[0])
         assert gl == len(B_tiles)
+        if batched and self.schedule != "baseline":
+            return self._matmul_encrypted_batched(A_tiles, B_tiles)
         out = []
         for i in range(gm):
             row = []
@@ -72,11 +95,46 @@ class SecureMatmulEngine:
                 for k in range(gl):
                     prod = hemm(self.eng, A_tiles[i][k], B_tiles[k][j],
                                 self._plan, self._keys,
-                                schedule=self.schedule)
+                                schedule=self.schedule,
+                                rotation_chunk=self.rotation_chunk,
+                                batched=False)
                     acc = prod if acc is None else self.eng.add(acc, prod)
                 row.append(acc)
             out.append(row)
         return out
+
+    def _matmul_encrypted_batched(self, A_tiles, B_tiles) -> list:
+        """Batched block MM: gm·gl + gl·gn HLTs per pipeline stage instead of
+        gm·gl·gn·(2 + 2l) sequential single-ciphertext HLT launches."""
+        eng, plan, keys = self.eng, self._plan, self._keys
+        sched, chunk = self.schedule, self.rotation_chunk
+        gm, gl = len(A_tiles), len(A_tiles[0])
+        gn = len(B_tiles[0])
+        ik = [(i, k) for i in range(gm) for k in range(gl)]
+        kj = [(k, j) for k in range(gl) for j in range(gn)]
+        # Step 1 — every tile transformed exactly once, one batched launch
+        items = ([(A_tiles[i][k], plan.ds_sigma) for i, k in ik]
+                 + [(B_tiles[k][j], plan.ds_tau) for k, j in kj])
+        outs = hlt_batched(eng, items, keys, schedule=sched,
+                           rotation_chunk=chunk)
+        hA0 = {ik[t]: hoist(eng, outs[t]) for t in range(len(ik))}
+        hB0 = {kj[t]: hoist(eng, outs[len(ik) + t]) for t in range(len(kj))}
+        # Step 2 — per inner iteration, ONE launch over all A0 and B0 tiles
+        acc: list = [[None] * gn for _ in range(gm)]
+        for kk in range(plan.l):
+            items = ([(hA0[p], plan.ds_eps[kk]) for p in ik]
+                     + [(hB0[p], plan.ds_omega[kk]) for p in kj])
+            res = hlt_batched(eng, items, keys, schedule=sched,
+                              rotation_chunk=chunk)
+            Ak = {p: res[t] for t, p in enumerate(ik)}
+            Bk = {p: res[len(ik) + t] for t, p in enumerate(kj)}
+            for i in range(gm):
+                for j in range(gn):
+                    for k in range(gl):
+                        prod = eng.rescale(eng.mult(Ak[i, k], Bk[k, j], keys))
+                        acc[i][j] = (prod if acc[i][j] is None
+                                     else eng.add(acc[i][j], prod))
+        return acc
 
     def decrypt_tiles(self, C_tiles, m: int, n: int) -> np.ndarray:
         t = self.tile

@@ -21,6 +21,30 @@ class ServeConfig:
     max_batch: int = 8
     max_len: int = 512
     temperature: float = 0.0       # 0 = greedy
+    # secure (HE) layer serving — threads down to the fused Pallas HLT
+    # datapath (core/hlt.py schedule="pallas", kernels/fused_hlt.py)
+    he_schedule: str = "pallas"
+    he_tile: int = 8
+    he_rotation_chunk: Optional[int] = None   # None = cost-model VMEM pick
+
+
+def build_secure_linears(cfg: ModelConfig, scfg: ServeConfig, weights: dict,
+                         rng: np.random.Generator, he_params=None) -> dict:
+    """Construct SecureLinear layers for ``cfg.secure_layers`` sharing ONE
+    SecureMatmulEngine (one CKKS context + key set + HLT precompute), wired to
+    the serving config's HE knobs. ``weights`` maps layer index -> (in, out)
+    weight matrix; only indices flagged secure are lifted to HE."""
+    from repro.core.params import toy_params
+    from repro.secure import SecureLinear, SecureMatmulEngine
+    if not cfg.secure_layers:
+        return {}
+    engine = SecureMatmulEngine(
+        he_params if he_params is not None
+        else toy_params(logN=7, L=4, k=3, beta=2),
+        tile=scfg.he_tile, schedule=scfg.he_schedule,
+        rotation_chunk=scfg.he_rotation_chunk)
+    return {i: SecureLinear(engine, np.asarray(W), rng)
+            for i, W in weights.items() if i in cfg.secure_layers}
 
 
 def serve_prefill_step(cfg: ModelConfig, params, tokens, cache):

@@ -1,0 +1,146 @@
+"""Production Pallas HLT wiring: schedule="pallas" must be BIT-exact vs the
+u64 "mo"/"hoisted" schedules (the Montgomery-domain precompute changes the
+arithmetic route, not the result), across parameter sets, including a d that
+is NOT a multiple of rotation_chunk (exercises the identity-rotation padding),
+and batched HLT must equal a loop of single-ciphertext calls."""
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import hemm as hemm_mod, hlt as hlt_mod
+from repro.core.ckks import CkksEngine
+from repro.core.costmodel import pick_rotation_chunk
+from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix, hemm
+from repro.core.params import toy_params
+
+PARAM_SETS = [
+    toy_params(logN=6, L=4, k=3, beta=2, scale_bits=26),
+    toy_params(logN=7, L=5, k=2, beta=3, scale_bits=26),
+]
+
+
+@pytest.fixture(scope="module", params=PARAM_SETS,
+                ids=[f"logN{p.logN}-L{p.L}-k{p.k}-b{p.beta}"
+                     for p in PARAM_SETS])
+def setup(request):
+    eng = CkksEngine(request.param)
+    rng = np.random.default_rng(42)
+    m, l, n = 4, 3, 5
+    plan = plan_hemm(eng, m, l, n)
+    keys = eng.keygen(rng, rot_steps=plan.rot_steps)
+    A = rng.uniform(-1, 1, size=(m, l))
+    B = rng.uniform(-1, 1, size=(l, n))
+    return dict(eng=eng, rng=rng, plan=plan, keys=keys, A=A, B=B,
+                ctA=encrypt_matrix(eng, keys, A, rng),
+                ctB=encrypt_matrix(eng, keys, B, rng))
+
+
+def _assert_ct_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.c0), np.asarray(b.c0))
+    np.testing.assert_array_equal(np.asarray(a.c1), np.asarray(b.c1))
+    assert a.level == b.level and a.scale == b.scale
+
+
+def test_pallas_bit_exact_vs_mo_and_hoisted(setup):
+    s = setup
+    eng, keys, ds = s["eng"], s["keys"], s["plan"].ds_sigma
+    ct_mo = hlt_mod.hlt(eng, s["ctA"], ds, keys, schedule="mo")
+    ct_ho = hlt_mod.hlt(eng, s["ctA"], ds, keys, schedule="hoisted")
+    ct_pl = hlt_mod.hlt(eng, s["ctA"], ds, keys, schedule="pallas")
+    _assert_ct_equal(ct_pl, ct_mo)
+    _assert_ct_equal(ct_pl, ct_ho)
+
+
+def test_pallas_padding_non_multiple_chunk(setup):
+    """σ of the 4×3 transform has d=5 diagonals; chunk=2 and 3 don't divide it,
+    so the precompute pads with zero-diagonal identity rotations."""
+    s = setup
+    eng, keys, ds = s["eng"], s["keys"], s["plan"].ds_sigma
+    assert ds.d == 5
+    ct_mo = hlt_mod.hlt(eng, s["ctA"], ds, keys, schedule="mo")
+    for chunk in (2, 3, 4):
+        assert ds.d % chunk != 0
+        ct_pl = hlt_mod.hlt(eng, s["ctA"], ds, keys, schedule="pallas",
+                            rotation_chunk=chunk)
+        _assert_ct_equal(ct_pl, ct_mo)
+
+
+def test_pallas_matches_baseline_within_noise(setup):
+    s = setup
+    eng, keys, ds = s["eng"], s["keys"], s["plan"].ds_sigma
+    ct_b = hlt_mod.hlt(eng, s["ctA"], ds, keys, schedule="baseline")
+    ct_p = hlt_mod.hlt(eng, s["ctA"], ds, keys, schedule="pallas")
+    vb = eng.decrypt_decode(ct_b, keys).real
+    vp = eng.decrypt_decode(ct_p, keys).real
+    np.testing.assert_allclose(vb, vp, atol=1e-3)
+
+
+def test_costmodel_chunk_default(setup):
+    """rotation_chunk=None routes through the cost model's VMEM pick."""
+    s = setup
+    eng = s["eng"]
+    assert pick_rotation_chunk(eng.params) >= 1
+    ct_mo = hlt_mod.hlt(eng, s["ctA"], s["plan"].ds_sigma, s["keys"],
+                        schedule="mo")
+    ct_pl = hlt_mod.hlt(eng, s["ctA"], s["plan"].ds_sigma, s["keys"],
+                        schedule="pallas", rotation_chunk=None)
+    _assert_ct_equal(ct_pl, ct_mo)
+
+
+def test_batched_hlt_equals_single_loop(setup):
+    """Mixed hoisted cts AND mixed diagonal sets (different d — exercises the
+    common-d_pad path) in one batched pipeline == loop of single hlt calls."""
+    s = setup
+    eng, keys, plan = s["eng"], s["keys"], s["plan"]
+    items = [(s["ctA"], plan.ds_sigma), (s["ctB"], plan.ds_tau),
+             (s["ctA"], plan.ds_eps[0]), (s["ctB"], plan.ds_omega[1])]
+    batch = hlt_mod.hlt_batched(eng, items, keys, schedule="pallas")
+    for (ct, ds), out in zip(items, batch):
+        single = hlt_mod.hlt(eng, ct, ds, keys, schedule="pallas")
+        _assert_ct_equal(out, single)
+        _assert_ct_equal(out, hlt_mod.hlt(eng, ct, ds, keys, schedule="mo"))
+
+
+def test_batched_fallback_schedules_match(setup):
+    """hlt_batched under mo/hoisted loops but must return the same results."""
+    s = setup
+    eng, keys, plan = s["eng"], s["keys"], s["plan"]
+    items = [(s["ctA"], plan.ds_sigma), (s["ctB"], plan.ds_tau)]
+    pallas = hlt_mod.hlt_batched(eng, items, keys, schedule="pallas")
+    mo = hlt_mod.hlt_batched(eng, items, keys, schedule="mo")
+    for a, b in zip(pallas, mo):
+        _assert_ct_equal(a, b)
+
+
+def test_precompute_cache_not_stale_after_rekeygen(setup):
+    """Re-keygen with the same plan must NOT serve Montgomery rot keys cached
+    from the old Keys object (the DiagSet cache checks key identity)."""
+    s = setup
+    eng, plan = s["eng"], s["plan"]
+    ds = plan.ds_sigma
+    hlt_mod.hlt(eng, s["ctA"], ds, s["keys"], schedule="pallas")  # warm cache
+    rng2 = np.random.default_rng(99)
+    keys2 = eng.keygen(rng2, rot_steps=plan.rot_steps)
+    ct2 = encrypt_matrix(eng, keys2, s["A"], rng2)
+    ct_mo = hlt_mod.hlt(eng, ct2, ds, keys2, schedule="mo")
+    ct_pl = hlt_mod.hlt(eng, ct2, ds, keys2, schedule="pallas")
+    _assert_ct_equal(ct_pl, ct_mo)
+    got = eng.decrypt_decode(ct_pl, keys2).real[:12]
+    sa = hemm_mod.u_sigma(4, 3) @ s["A"].flatten(order="F")
+    np.testing.assert_allclose(got, sa, atol=1e-2)
+
+
+def test_hemm_pallas_bit_exact_and_correct(setup):
+    """hemm with the batched pallas pipeline == hemm with mo, bit-exactly, and
+    both decrypt to A @ B."""
+    s = setup
+    eng, keys, plan = s["eng"], s["keys"], s["plan"]
+    ct_mo = hemm(eng, s["ctA"], s["ctB"], plan, keys, schedule="mo")
+    ct_pl = hemm(eng, s["ctA"], s["ctB"], plan, keys, schedule="pallas")
+    _assert_ct_equal(ct_pl, ct_mo)
+    got = decrypt_matrix(eng, keys, ct_pl, 4, 5)
+    np.testing.assert_allclose(got, s["A"] @ s["B"], atol=0.05)
+    # explicit non-batched pallas hemm agrees too
+    ct_seq = hemm(eng, s["ctA"], s["ctB"], plan, keys, schedule="pallas",
+                  batched=False)
+    _assert_ct_equal(ct_seq, ct_mo)

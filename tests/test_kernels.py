@@ -91,6 +91,38 @@ def test_fused_hlt_kernel(logN, d, nbeta, chunk):
     np.testing.assert_array_equal(np.asarray(got1), np.asarray(want1))
 
 
+@pytest.mark.parametrize("logN,B,d,nbeta,chunk", [(5, 2, 4, 1, 2),
+                                                  (6, 3, 6, 2, 3),
+                                                  (6, 1, 4, 2, 4)])
+def test_fused_hlt_batched_kernel(logN, B, d, nbeta, chunk):
+    """Batched kernel (leading ciphertext axis, per-batch rotation operands)
+    == loop of single-ciphertext oracles."""
+    ctx = _ctx(logN=logN, L=5, k=2, beta=nbeta)
+    rng = np.random.default_rng(5)
+    p = ctx.params
+    M, N = p.num_total, p.N
+    qs = np.asarray(ctx.moduli_host, dtype=np.uint64)[:, None]
+    digits = _rand(rng, qs[None], (B, nbeta, M, N))
+    c0e = _rand(rng, qs, (B, M, N))
+    c1e = _rand(rng, qs, (B, M, N))
+    u = _rand(rng, qs[None], (B, d, M, N))
+    rk0 = _rand(rng, qs[None, None], (B, d, nbeta, M, N))
+    rk1 = _rand(rng, qs[None, None], (B, d, nbeta, M, N))
+    perms = np.stack([[np.random.default_rng(10 * b + i).permutation(N)
+                       for i in range(d)] for b in range(B)]).astype(np.int32)
+    is_id = np.zeros((B, d, 1), np.int32)
+    for b in range(B):           # different identity slot per batch element
+        is_id[b, b % d] = 1
+    args = (jnp.asarray(digits), jnp.asarray(c0e), jnp.asarray(c1e),
+            jnp.asarray(u), jnp.asarray(rk0), jnp.asarray(rk1),
+            jnp.asarray(perms), jnp.asarray(is_id), ctx.moduli_u32,
+            ctx.qneg_inv)
+    got0, got1 = ops.fused_hlt_batched(*args, chunk=chunk)
+    want0, want1 = ref.fused_hlt_batched_ref(*args)
+    np.testing.assert_array_equal(np.asarray(got0), np.asarray(want0))
+    np.testing.assert_array_equal(np.asarray(got1), np.asarray(want1))
+
+
 @pytest.mark.parametrize("logN", [5, 6, 7])
 def test_baseconv_kernel(logN):
     ctx = _ctx(logN=logN, L=4, k=3, beta=2)
