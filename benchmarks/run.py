@@ -6,19 +6,30 @@ quantity: counts, MB, speedups, ...). Sections:
   table1   — HE MM operation counts (paper Table I) for the Table III grid
   table2   — parameter sets + §III-B3 cost-model numbers (0.43/3.6 MB, ...)
   eq24     — MO-HLT on-chip requirement + reduction factor (Fig. 2 / Eq. 24)
-  fig6     — measured HLT/HE MM latency: baseline vs hoisted vs MO vs fused
-             Pallas schedules (CPU, reduced N) + the paper's FPGA speedups
-  blockmm  — batched block MM (one fused pipeline over all ciphertext tiles)
-             vs the sequential tile loop, schedule="pallas"
+  fig6     — measured HLT/HE MM latency per compiled schedule: baseline vs
+             hoisted vs MO vs fused Pallas programs (CPU, reduced N) + the
+             paper's FPGA speedups
+  blockmm  — batched block MM (slot-indexed fused pipelines over all
+             ciphertext tiles) vs the sequential tile loop
   kernels  — Pallas kernel calls (interpret mode) vs jnp oracle
   roofline — §Roofline table from results/dryrun/*.json (if present)
+
+Flags:
+  --json [PATH]  also write machine-readable results (per-schedule wall
+                 times, operand bytes before/after slot dedup) to PATH
+                 (default BENCH_hemm.json)
+  --smoke        minimal reps — CI smoke mode
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
 
 import numpy as np
+
+# --json collector: section -> {key: value}; filled by the bench functions.
+RESULTS: dict = {}
 
 
 def _t(fn, *args, reps=3, **kw):
@@ -41,6 +52,10 @@ def _block(x):
 def row(name, us, derived):
     print(f"{name},{us if us is None else round(us, 1)},{derived}",
           flush=True)
+    section = name.split("/", 1)[0]
+    RESULTS.setdefault(section, {})[name] = {
+        "us_per_call": None if us is None else round(us, 1),
+        "derived": str(derived)}
 
 
 def bench_table1():
@@ -69,64 +84,92 @@ def bench_table2_costmodel():
             f"{r['reduction_x']:.1f}x")
 
 
-def bench_fig6_schedules():
+def bench_fig6_schedules(smoke: bool = False):
     """Measured on CPU at reduced N (structure identical to the paper's):
-    per-HLT latency for each schedule + full HE MM."""
-    import jax.numpy as jnp
-    import numpy as np
-    from repro.core import hlt as hlt_mod
+    per-HLT latency for each COMPILED schedule + full HE MM programs, plus
+    the Step-2 operand footprint before/after slot dedup."""
     from repro.core.ckks import CkksEngine
-    from repro.core.hemm import plan_hemm, encrypt_matrix, hemm
+    from repro.core.compile import HEContext, compile_hemm, compile_hlt
+    from repro.core.hemm import plan_hemm, encrypt_matrix
     from repro.core.params import toy_params
 
-    eng = CkksEngine(toy_params(logN=8, L=4, k=3, beta=2, scale_bits=26))
+    reps = 1 if smoke else 3
+    logN = 7 if smoke else 8
+    ctx = HEContext(CkksEngine(
+        toy_params(logN=logN, L=4, k=3, beta=2, scale_bits=26)))
+    eng = ctx.eng
     rng = np.random.default_rng(0)
     m = l = n = 8                       # Type-IV (square) at reduced scale
     plan = plan_hemm(eng, m, l, n)
-    keys = eng.keygen(rng, rot_steps=plan.rot_steps)
+    ctx.keygen(rng, rot_steps=plan.rot_steps)
     A = rng.uniform(-1, 1, (m, l))
     B = rng.uniform(-1, 1, (l, n))
-    ctA = encrypt_matrix(eng, keys, A, rng)
-    ctB = encrypt_matrix(eng, keys, B, rng)
+    ctA = encrypt_matrix(eng, ctx.keys, A, rng)
+    ctB = encrypt_matrix(eng, ctx.keys, B, rng)
     ds = plan.ds_sigma
 
-    us_base, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys,
-                                        schedule="baseline"), reps=1)
-    us_hoist, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys,
-                                         schedule="hoisted"), reps=1)
-    us_mo, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys, schedule="mo"),
-                  reps=3)
-    us_pl, _ = _t(lambda: hlt_mod.hlt(eng, ctA, ds, keys, schedule="pallas"),
-                  reps=3)
-    row("fig6/hlt/baseline", us_base, f"d={ds.d}")
-    row("fig6/hlt/hoisted", us_hoist,
-        f"speedup_vs_baseline={us_base / us_hoist:.2f}x")
-    row("fig6/hlt/mo", us_mo,
-        f"speedup_vs_baseline={us_base / us_mo:.2f}x")
-    row("fig6/hlt/pallas", us_pl,
-        f"speedup_vs_baseline={us_base / us_pl:.2f}x")
-    us_mm, _ = _t(lambda: hemm(eng, ctA, ctB, plan, keys, schedule="mo"),
-                  reps=1)
+    hlt_us = {}
+    for sched, r in (("baseline", 1), ("hoisted", 1), ("mo", reps),
+                     ("pallas", reps)):
+        run = compile_hlt(ctx, ds, level=ctA.level, schedule=sched)
+        hlt_us[sched], _ = _t(lambda run=run: run(ctA), reps=r)
+    row("fig6/hlt/baseline", hlt_us["baseline"], f"d={ds.d}")
+    for sched in ("hoisted", "mo", "pallas"):
+        row(f"fig6/hlt/{sched}", hlt_us[sched],
+            f"speedup_vs_baseline={hlt_us['baseline'] / hlt_us[sched]:.2f}x")
+
+    prog_mo = compile_hemm(ctx, plan, schedule="mo")
+    prog_pl = compile_hemm(ctx, plan, schedule="pallas")
+    us_mm, _ = _t(lambda: prog_mo(ctA, ctB), reps=1)
     row("fig6/hemm/8-8-8/mo", us_mm, "depth=3")
-    us_mmp, _ = _t(lambda: hemm(eng, ctA, ctB, plan, keys,
-                                schedule="pallas"), reps=1)
+    us_mmp, _ = _t(lambda: prog_pl(ctA, ctB), reps=1)
     row("fig6/hemm/8-8-8/pallas", us_mmp,
         f"depth=3;batched_step2;vs_mo={us_mm / us_mmp:.2f}x")
     row("fig6/paper/avg_speedup", None, "221x (FPGA, paper Fig. 6)")
     row("fig6/paper/max_speedup", None, "1337x (160-160-160 Set-C)")
 
+    # operand footprint of the compiled Step-2 (2·l HLTs): key/diag tensors
+    # deduped to unique slots, hoisting digits stored 2× (A0/B0) instead of
+    # 2·l× — the arena numbers the --json consumers track.
+    s2 = prog_pl.plan.step2
+    p = eng.params
+    m_ext = len(eng.tools.digit_bases(s2.level)[0][2])
+    h_bytes = (s2.nbeta + 2) * m_ext * p.N * 4       # digits + c0e + c1e
+    hoist_dedup, hoist_naive = 2 * h_bytes, s2.batch * h_bytes
+    row("fig6/operands/step2_diag", None,
+        f"dedup_MB={s2.operand_bytes / 2**20:.3f};"
+        f"naive_MB={s2.operand_bytes_naive / 2**20:.3f}")
+    row("fig6/operands/step2_hoist", None,
+        f"dedup_MB={hoist_dedup / 2**20:.3f};"
+        f"naive_MB={hoist_naive / 2**20:.3f};x={hoist_naive / hoist_dedup:.1f}")
+    RESULTS["hemm"] = {
+        "shape": [m, l, n], "logN": logN,
+        "hlt_us_per_schedule": {k: round(v, 1) for k, v in hlt_us.items()},
+        "hemm_us_per_schedule": {"mo": round(us_mm, 1),
+                                 "pallas": round(us_mmp, 1)},
+        "step2_operand_bytes": {
+            "diag_dedup": s2.operand_bytes,
+            "diag_naive": s2.operand_bytes_naive,
+            "hoist_dedup": hoist_dedup, "hoist_naive": hoist_naive},
+        "step2_plan": {"batch": s2.batch, "n_diag_slots": s2.n_diag_slots,
+                       "chunk": s2.chunk, "d_pad": s2.d_pad,
+                       "schedule": s2.schedule},
+    }
 
-def bench_blockmm():
+
+def bench_blockmm(smoke: bool = False):
     """Block MM across ciphertext tiles (paper §VI-D / abstract's large-scale
-    consecutive HE MM): sequential per-tile-pair hemm loop vs ONE batched
-    fused-HLT pipeline per stage, both schedule="pallas"."""
+    consecutive HE MM): sequential per-tile-pair hemm-program loop vs the
+    slot-indexed batched pipelines (cost-model-selected schedule)."""
+    from repro.core.compile import compile_hlt
     from repro.core.params import toy_params
     from repro.secure import SecureMatmulEngine
     rng = np.random.default_rng(0)
-    engine = SecureMatmulEngine(toy_params(logN=6, L=4, k=3, beta=2), tile=4,
-                                schedule="pallas")
-    A = rng.uniform(-1, 1, (6, 5))
-    B = rng.uniform(-1, 1, (5, 7))
+    engine = SecureMatmulEngine(toy_params(logN=6, L=4, k=3, beta=2), tile=4)
+    # smoke: 2+2 tiles instead of 4+4 — same dedup story, ~half the wall time
+    ma, nb = ((4, 4) if smoke else (6, 7))
+    A = rng.uniform(-1, 1, (ma, 5))
+    B = rng.uniform(-1, 1, (5, nb))
     engine.keygen(rng)
     At = engine.encrypt_tiles(A, rng)
     Bt = engine.encrypt_tiles(B, rng)
@@ -138,6 +181,28 @@ def bench_blockmm():
     row(f"blockmm/{shape}/loop", us_loop, "sequential tile loop")
     row(f"blockmm/{shape}/batched", us_bat,
         f"speedup_vs_loop={us_loop / us_bat:.2f}x")
+    # Step-1 operand dedup across the tile grid: σ/τ tensors stored once
+    # each (2 slots), not once per tile (memoized compile — same object).
+    plan = engine._plan
+    nA, nB = len(At) * len(At[0]), len(Bt) * len(Bt[0])
+    step1 = compile_hlt(
+        engine.ctx, [plan.ds_sigma] * nA + [plan.ds_tau] * nB,
+        level=At[0][0].level, schedule=engine.schedule,
+        rotation_chunk=engine.rotation_chunk)
+    s1 = step1.plan
+    row(f"blockmm/{shape}/step1_operands", None,
+        f"slots={s1.n_diag_slots}/{s1.batch};"
+        f"dedup_MB={s1.operand_bytes / 2**20:.3f};"
+        f"naive_MB={s1.operand_bytes_naive / 2**20:.3f};"
+        f"x={s1.dedup_factor:.1f}")
+    RESULTS["blockmm"] = {
+        "shape": shape, "loop_us": round(us_loop, 1),
+        "batched_us": round(us_bat, 1),
+        "step1_operand_bytes": {"dedup": s1.operand_bytes,
+                                "naive": s1.operand_bytes_naive},
+        "step1_slots": {"unique": s1.n_diag_slots, "batch": s1.batch},
+        "schedule": engine.schedule,
+    }
 
 
 def bench_kernels():
@@ -182,15 +247,31 @@ def bench_roofline():
 
 
 def main() -> None:
+    import inspect
+
     import repro  # noqa: F401
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("section", nargs="?", default=None,
+                    help="run only sections whose name contains this")
+    ap.add_argument("--json", nargs="?", const="BENCH_hemm.json", default=None,
+                    metavar="PATH", help="write machine-readable results")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal reps / sizes (CI smoke mode)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = [bench_table1, bench_table2_costmodel, bench_fig6_schedules,
                 bench_blockmm, bench_kernels, bench_roofline]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     for fn in sections:
-        if only and only not in fn.__name__:
+        if args.section and args.section not in fn.__name__:
             continue
-        fn()
+        if "smoke" in inspect.signature(fn).parameters:
+            fn(smoke=args.smoke)
+        else:
+            fn()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(RESULTS, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

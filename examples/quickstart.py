@@ -3,32 +3,39 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Encrypts two matrices under CKKS, multiplies them fully under encryption
-(paper Algorithm 2 with the MO-HLT datapath), decrypts, and checks against
-the plaintext product.
+(paper Algorithm 2), decrypts, and checks against the plaintext product —
+through the plan/compile/execute API: an HEContext owns engine + keys +
+operand arena, compile_hemm runs the cost model once (schedule, rotation
+chunk, d-padding), and the returned HEMMProgram is the reusable executable.
 """
 import numpy as np
 
 import repro  # noqa: F401
 from repro.core.ckks import CkksEngine
-from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix, hemm
+from repro.core.compile import HEContext, compile_hemm
+from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix
 from repro.core.params import toy_params
 
 rng = np.random.default_rng(0)
-eng = CkksEngine(toy_params(logN=7, L=4, k=3, beta=2))
+ctx = HEContext(CkksEngine(toy_params(logN=7, L=4, k=3, beta=2)))
 
 m, l, n = 4, 3, 5                       # paper Fig. 1 example shape
-plan = plan_hemm(eng, m, l, n)
-keys = eng.keygen(rng, rot_steps=plan.rot_steps)
+plan = plan_hemm(ctx.eng, m, l, n)      # transformation diagonals (Eqs. 6-9)
+ctx.keygen(rng, rot_steps=plan.rot_steps)
 
 A = rng.uniform(-1, 1, (m, l))
 B = rng.uniform(-1, 1, (l, n))
-ctA = encrypt_matrix(eng, keys, A, rng)   # both inputs encrypted
-ctB = encrypt_matrix(eng, keys, B, rng)
+ctA = encrypt_matrix(ctx.eng, ctx.keys, A, rng)   # both inputs encrypted
+ctB = encrypt_matrix(ctx.eng, ctx.keys, B, rng)
 
-# schedule="pallas": the fused MO-HLT kernel datapath with batched Step-1/2
-# pipelines; "mo"/"hoisted"/"baseline" run the u64 reference schedules.
-ctC = hemm(eng, ctA, ctB, plan, keys, schedule="pallas")
-C = decrypt_matrix(eng, keys, ctC, m, n)
+# Compile once (cost model picks the fused Pallas schedule + VMEM chunk),
+# execute as often as you like. prog.plan is fully inspectable.
+prog = compile_hemm(ctx, plan)
+print("compiled:", prog.plan.schedule, "schedule; Step-2 batch",
+      prog.plan.step2.batch, "rotation chunk", prog.plan.step2.chunk)
+
+ctC = prog(ctA, ctB)
+C = decrypt_matrix(ctx.eng, ctx.keys, ctC, m, n)
 
 err = np.abs(C - A @ B).max()
 print("max error vs plaintext matmul:", err)

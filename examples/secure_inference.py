@@ -17,10 +17,11 @@ d_in, d_hidden, d_out = 6, 8, 4
 W1 = rng.normal(size=(d_in, d_hidden)) * 0.5
 W2 = rng.normal(size=(d_hidden, d_out)) * 0.5
 
-# schedule="pallas" drives the fused MO-HLT kernel datapath and batches the
-# block-MM tile HLTs into single fused-kernel pipelines (core/hlt.py).
-engine = SecureMatmulEngine(toy_params(logN=7, L=4, k=3, beta=2), tile=4,
-                            schedule="pallas")
+# The engine owns an HEContext; the cost model selects the fused Pallas
+# schedule, block-MM tile HLTs run as slot-indexed batched pipelines with
+# the σ/τ key/diagonal operands stored once in the context arena
+# (core/compile.py — no per-tile replication).
+engine = SecureMatmulEngine(toy_params(logN=7, L=4, k=3, beta=2), tile=4)
 head = SecureLinear(engine, W2, rng)     # W2 leaves the owner encrypted
 
 x = rng.normal(size=(4, d_in))           # a batch of 4 activations

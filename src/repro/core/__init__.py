@@ -1,3 +1,25 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public entry points (the plan/compile/execute API) are re-exported here;
+# see core/compile.py for the full story.
+
+
+def __getattr__(name):
+    # Lazy re-export: keeps `import repro.core` cheap and avoids import
+    # cycles between compile.py and the math modules.
+    _api = {
+        "HEContext": "repro.core.compile",
+        "OperandArena": "repro.core.compile",
+        "CompiledHLT": "repro.core.compile",
+        "HEMMProgram": "repro.core.compile",
+        "HLTPlan": "repro.core.compile",
+        "HEMMPlan": "repro.core.compile",
+        "compile_hlt": "repro.core.compile",
+        "compile_hemm": "repro.core.compile",
+    }
+    if name in _api:
+        import importlib
+        return getattr(importlib.import_module(_api[name]), name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

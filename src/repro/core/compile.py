@@ -1,0 +1,548 @@
+"""Plan → compile → execute: the public API for HE matmul.
+
+FAME's central design move is a cost-model-driven *planning* step (on-chip
+memory budget → datapath configuration) separated from *execution*; FAB shows
+that explicit operand residency — not raw compute — decides HE accelerator
+performance.  This module is that separation for the jax/Pallas reproduction:
+
+    ctx = HEContext(CkksEngine(params))          # engine + keys + arena
+    plan = plan_hemm(ctx.eng, m, l, n)
+    ctx.keygen(rng, rot_steps=plan.rot_steps)
+    prog = compile_hemm(ctx, plan)               # cost model runs ONCE here
+    ctC = prog(ctA, ctB)                         # compiled, reusable
+    prog.plan                                    # inspectable: schedule,
+                                                 # chunk, padded d, per-stage
+                                                 # byte/rotation counts
+
+``HEContext`` owns ALL precompute: the Montgomery key/diagonal operand arena,
+the jitted pipelines, and the compiled-program memo.  Nothing hides in module
+globals keyed by ``id(engine)`` (an id can be recycled after GC and silently
+serve a stale pipeline) or in ``DiagSet.__dict__`` side-channels; after a
+re-keygen, ``ctx.invalidate()`` (called automatically by ``ctx.keygen``)
+drops everything.
+
+``compile_hlt(ctx, diags, level=..., batch=...)`` returns a ``CompiledHLT``.
+Batched compiles store each UNIQUE operand tensor once in the arena and map
+batch index → operand slot: the fused kernel gathers operands by slot index
+through scalar-prefetch BlockSpec index maps (kernels/fused_hlt.py
+``fused_hlt_indexed``) instead of ``jnp.stack``-ing B-fold copies.  hemm
+Step-2's l-fold hoisted digits and block MM's per-tile σ/τ keys/diagonals are
+therefore stored once — an ~l× / ~tiles× operand-memory reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import hlt as hlt_mod
+from repro.core.ckks import Ciphertext, CkksEngine, Keys
+from repro.core.costmodel import (hlt_stage_costs, pick_rotation_chunk,
+                                  select_schedule)
+from repro.core.hlt import DiagSet, Hoisted, hoist, hoist_batched
+
+
+# ---------------------------------------------------------------------------
+# identity keys + operand arena
+# ---------------------------------------------------------------------------
+
+
+class _StrongKey:
+    """Dict key by object identity holding a STRONG reference.
+
+    Unlike a bare ``id(obj)`` key, the reference keeps the object alive, so
+    its id cannot be recycled by a new object while the entry exists — the
+    failure mode of the old module-level ``id(engine)``-keyed jit caches.
+    """
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj):
+        self.obj = obj
+
+    def __hash__(self):
+        return id(self.obj)
+
+    def __eq__(self, other):
+        return isinstance(other, _StrongKey) and self.obj is other.obj
+
+
+class OperandArena:
+    """Device-resident operand store: ONE slot per unique operand group.
+
+    Entries are keyed by (kind, owning object identity, compile point), e.g.
+    the Montgomery kernel operands of one DiagSet at one (level, β, d_pad).
+    Compiling the same DiagSet into many programs (hemm Step-1, every block-MM
+    tile stage, …) reuses the same device buffers.
+    """
+
+    def __init__(self):
+        self._entries: dict = {}
+
+    def slot(self, kind: str, obj, extra: tuple, builder):
+        key = (kind, _StrongKey(obj), extra)
+        hit = self._entries.get(key)
+        if hit is None:
+            hit = (len(self._entries), builder())
+            self._entries[key] = hit
+        return hit                      # (slot_id, value)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        total = 0
+        for _, value in self._entries.values():
+            for arr in jax.tree_util.tree_leaves(value):
+                total += getattr(arr, "nbytes", 0)
+        return total
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+# ---------------------------------------------------------------------------
+# HEContext
+# ---------------------------------------------------------------------------
+
+
+class HEContext:
+    """Engine + keys + device-resident operand arena: owns ALL precompute.
+
+    Create with an engine (and optionally existing keys), then ``keygen``::
+
+        ctx = HEContext(CkksEngine(params))
+        ctx.keygen(rng, rot_steps=plan.rot_steps)
+
+    ``invalidate()`` drops the arena, the jitted pipelines and the compiled
+    program memo; ``keygen()`` calls it so a re-keyed context can never serve
+    Montgomery operands derived from the old keys.
+    """
+
+    def __init__(self, eng: CkksEngine, keys: Optional[Keys] = None):
+        self.eng = eng
+        self.keys = keys
+        self.arena = OperandArena()
+        self._jit: dict = {}            # pipeline cache (key -> jitted fn)
+        self._compiled: dict = {}       # compile memo (key -> program)
+        self._generation = 0            # bumped by invalidate()
+
+    @classmethod
+    def create(cls, params, rng: np.random.Generator,
+               rot_steps: Sequence[int] = ()) -> "HEContext":
+        ctx = cls(CkksEngine(params))
+        ctx.keygen(rng, rot_steps=rot_steps)
+        return ctx
+
+    def keygen(self, rng: np.random.Generator,
+               rot_steps: Sequence[int] = ()) -> Keys:
+        self.keys = self.eng.keygen(rng, rot_steps=rot_steps)
+        self.invalidate()
+        return self.keys
+
+    def invalidate(self) -> None:
+        """Drop every arena operand, jitted pipeline and compiled program
+        (call after replacing keys by hand; keygen() does it for you).
+        Compiled objects from before the invalidation refuse to run — their
+        operands were derived from the old keys."""
+        self.arena.clear()
+        self._jit.clear()
+        self._compiled.clear()
+        self._generation += 1
+
+    def _check_generation(self, gen: int) -> None:
+        if gen != self._generation:
+            raise RuntimeError(
+                "stale compiled object: its HEContext was invalidated "
+                "(re-keygen?) after compilation — recompile via "
+                "compile_hlt/compile_hemm")
+
+    # -- jitted pipelines (merged ModDown+Rescale included) ------------------
+
+    def _pallas_pipeline(self, level: int, chunk: int, kind: str):
+        """kind: "single" (one ct), "indexed" (slot-indexed batch)."""
+        key = ("pallas", kind, level, chunk)
+        fn = self._jit.get(key)
+        if fn is not None:
+            return fn
+        from repro.kernels import ops
+        eng = self.eng
+        full = eng.tools.digit_bases(level)[0][2]
+        view = eng.basis(full)
+        q32, qneg = view.moduli_u32, view.qneg_inv
+
+        def single(digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id):
+            a0, a1 = ops.fused_hlt(digits, c0e, c1e, u_m, rk0_m, rk1_m,
+                                   perms, is_id, q32, qneg, chunk=chunk)
+            return (eng._mod_down_eval(a0, level, drop_last=True),
+                    eng._mod_down_eval(a1, level, drop_last=True))
+
+        def indexed(digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id,
+                    ct_slots, diag_slots):
+            a0, a1 = ops.fused_hlt_indexed(
+                digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id,
+                ct_slots, diag_slots, q32, qneg, chunk=chunk)
+            down = jax.vmap(
+                lambda a: eng._mod_down_eval(a, level, drop_last=True))
+            return down(a0), down(a1)
+
+        fn = jax.jit(single if kind == "single" else indexed)
+        self._jit[key] = fn
+        return fn
+
+
+# Context pool for the DEPRECATED string-threaded shims (hlt(), hemm(), ...):
+# one context per (engine, keys) pair, keyed by strong identity so a live
+# entry's ids can never alias a new engine (the old _MO_JIT_CACHE bug).
+# Bounded LRU: evicting an entry drops its strong refs (engine, keys, arena,
+# jitted pipelines) so shim-heavy long-lived processes don't leak; a later
+# id recycled from an EVICTED pair maps to a fresh context, never stale state.
+_LEGACY_CONTEXTS: "dict" = {}
+_LEGACY_POOL_MAX = 8
+
+
+def legacy_context(eng: CkksEngine, keys: Keys) -> HEContext:
+    key = (_StrongKey(eng), _StrongKey(keys))
+    ctx = _LEGACY_CONTEXTS.pop(key, None)
+    if ctx is None:
+        ctx = HEContext(eng, keys)
+        while len(_LEGACY_CONTEXTS) >= _LEGACY_POOL_MAX:
+            _LEGACY_CONTEXTS.pop(next(iter(_LEGACY_CONTEXTS)))
+    _LEGACY_CONTEXTS[key] = ctx         # (re)insert as most-recently-used
+    return ctx
+
+
+# ---------------------------------------------------------------------------
+# compile_hlt -> CompiledHLT
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HLTPlan:
+    """The cost model's output for one compiled HLT — fully inspectable."""
+    schedule: str                       # chosen schedule
+    level: int                          # input ciphertext level
+    batch: Optional[int]                # None = single-ciphertext compile
+    nbeta: int                          # digit count β' at this level
+    chunk: int                          # rotation chunk (VMEM budget pick)
+    d: tuple                            # per-item real diagonal counts
+    d_pad: int                          # common padded rotation count
+    diag_slots: tuple                   # batch index -> unique operand slot
+    n_diag_slots: int                   # == number of UNIQUE diagonal sets
+    rotations: int                      # total real rotations per execution
+    operand_bytes: int                  # deduped key/diag operand bytes
+    operand_bytes_naive: int            # what B-fold stacking would allocate
+    stage_costs: dict                   # per-stage byte/rotation counts
+
+    @property
+    def dedup_factor(self) -> float:
+        return self.operand_bytes_naive / max(1, self.operand_bytes)
+
+
+def _operand_nbytes(ops_tuple) -> int:
+    return sum(int(a.nbytes) for a in ops_tuple)
+
+
+def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
+                level: Optional[int] = None, batch: Optional[int] = None,
+                schedule: Optional[str] = None,
+                rotation_chunk: Optional[int] = None) -> "CompiledHLT":
+    """Run the cost model once and return a reusable CompiledHLT.
+
+    ``diags``: one DiagSet (single-ciphertext compile, or — with ``batch=B``
+    — a B-wide batch sharing that DiagSet) or a sequence of DiagSets (one per
+    batch element; duplicates share one operand slot).
+
+    ``schedule=None`` lets the cost model choose (select_schedule);
+    ``rotation_chunk=None`` takes the VMEM-budget pick.  Compiles are memoized
+    on the context: compiling the same diagonal sets at the same point returns
+    the SAME CompiledHLT object.
+    """
+    assert ctx.keys is not None, "HEContext has no keys; call ctx.keygen()"
+    eng = ctx.eng
+    level = eng.params.L if level is None else level
+    if isinstance(diags, DiagSet):
+        diag_list = [diags] if batch is None else [diags] * int(batch)
+        batch = None if batch is None else int(batch)
+    else:
+        diag_list = list(diags)
+        assert batch is None or batch == len(diag_list), (batch, len(diag_list))
+        batch = len(diag_list)
+        assert batch > 0, "batched compile needs at least one DiagSet"
+    nbeta = len(eng.tools.digit_bases(level))
+    if schedule is None:
+        schedule = select_schedule(eng.params, nbeta=nbeta)
+    assert schedule in hlt_mod.SCHEDULES, schedule
+
+    memo_key = ("hlt", schedule, level, batch, rotation_chunk,
+                tuple(_StrongKey(ds) for ds in diag_list))
+    hit = ctx._compiled.get(memo_key)
+    if hit is not None:
+        return hit
+
+    d_list = tuple(ds.d for ds in diag_list)
+    d_max = max(d_list)
+    if rotation_chunk is None and schedule == "pallas":
+        chunk = max(1, min(pick_rotation_chunk(eng.params, nbeta=nbeta), d_max))
+    elif rotation_chunk is None:
+        chunk = d_max
+    else:
+        chunk = max(1, min(rotation_chunk, d_max))
+    d_pad = -(-d_max // chunk) * chunk
+
+    # unique-operand slots: one arena entry per distinct DiagSet
+    local = {}                          # id(ds) -> local slot
+    uniq: list = []                     # local slot -> DiagSet
+    slots = []
+    for ds in diag_list:
+        k = id(ds)
+        if k not in local:
+            local[k] = len(uniq)
+            uniq.append(ds)
+        slots.append(local[k])
+
+    operands = None
+    if schedule == "pallas":
+        per = [ctx.arena.slot(
+                   "pallas_operands", ds, (level, nbeta, d_pad),
+                   lambda ds=ds: hlt_mod._build_pallas_operands(
+                       eng, ds, ctx.keys, level, nbeta, d_pad))[1]
+               for ds in uniq]
+        if batch is None:
+            operands = per[0]
+        else:
+            operands = tuple(jnp.stack([p[i] for p in per]) for i in range(5))
+
+    op_bytes = _operand_nbytes(operands) if operands is not None else 0
+    naive = (op_bytes if batch is None else
+             op_bytes // max(1, len(uniq)) * len(diag_list))
+    plan = HLTPlan(
+        schedule=schedule, level=level, batch=batch, nbeta=nbeta, chunk=chunk,
+        d=d_list, d_pad=d_pad, diag_slots=tuple(slots),
+        n_diag_slots=len(uniq), rotations=sum(d_list),
+        operand_bytes=op_bytes, operand_bytes_naive=naive,
+        stage_costs=hlt_stage_costs(
+            eng.params, d=d_max, d_pad=d_pad, nbeta=nbeta, chunk=chunk,
+            n_limbs_ext=len(eng.tools.digit_bases(level)[0][2])))
+    run = CompiledHLT(ctx, plan, tuple(diag_list), tuple(uniq), operands)
+    ctx._compiled[memo_key] = run
+    return run
+
+
+class CompiledHLT:
+    """A compiled homomorphic linear transformation.
+
+    Call with one ciphertext/hoisting-product (single compile) or a sequence
+    of them (batched compile; repeated objects share one hoisting slot).
+    Execution never re-runs the cost model or rebuilds operands.
+    """
+
+    def __init__(self, ctx: HEContext, plan: HLTPlan, diag_list, uniq_diags,
+                 operands):
+        self.ctx = ctx
+        self.plan = plan
+        self._diags = diag_list         # strong refs, one per batch element
+        self._uniq = uniq_diags
+        self._operands = operands       # single tuple | stacked tuple | None
+        self._diag_slots = (None if plan.batch is None else
+                            jnp.asarray(np.array(plan.diag_slots, np.int32)))
+        self._gen = ctx._generation
+
+    # -- helpers -------------------------------------------------------------
+
+    def _hoist_items(self, items):
+        """Dedupe by object identity, hoist unique ciphertexts in ONE batched
+        pipeline, return (unique_hoisted, ct_slots)."""
+        eng = self.ctx.eng
+        local, uniq, slots = {}, [], []
+        for it in items:
+            k = id(it)
+            if k not in local:
+                local[k] = len(uniq)
+                uniq.append(it)
+            slots.append(local[k])
+        cts = [(i, it) for i, it in enumerate(uniq)
+               if not isinstance(it, Hoisted)]
+        hoisted = list(uniq)
+        for (i, _), h in zip(cts, hoist_batched(eng, [it for _, it in cts])):
+            hoisted[i] = h
+        for h in hoisted:
+            assert h.level == self.plan.level, (h.level, self.plan.level)
+        return hoisted, slots
+
+    def _finish(self, c0, c1, scale_in: float, ds: DiagSet) -> Ciphertext:
+        level = self.plan.level
+        q_ell = self.ctx.eng.ctx.moduli_host[level]
+        return Ciphertext(c0, c1, level - 1, scale_in * ds.scale / q_ell)
+
+    # -- execution -----------------------------------------------------------
+
+    def __call__(self, items):
+        self.ctx._check_generation(self._gen)
+        if self.plan.batch is None:
+            return self._run_single(items, self._diags[0], self._operands)
+        items = list(items)
+        assert len(items) == self.plan.batch, (len(items), self.plan.batch)
+        if self.plan.schedule == "pallas":
+            return self._run_batched_pallas(items)
+        # reference schedules: loop of single executions (oracle path)
+        return [self._run_single(it, ds, None)
+                for it, ds in zip(items, self._diags)]
+
+    def _run_single(self, item, ds: DiagSet, operands) -> Ciphertext:
+        ctx, eng, plan = self.ctx, self.ctx.eng, self.plan
+        if plan.schedule == "baseline":
+            assert isinstance(item, Ciphertext), \
+                "schedule='baseline' has no hoisting product; pass Ciphertexts"
+            assert item.level == plan.level
+            return hlt_mod._hlt_baseline(eng, item, ds, ctx.keys)
+        hst = item if isinstance(item, Hoisted) else hoist(eng, item)
+        assert hst.level == plan.level, (hst.level, plan.level)
+        if plan.schedule == "hoisted":
+            return hlt_mod._hlt_hoisted(eng, hst, ds, ctx.keys)
+        if plan.schedule == "mo":
+            return hlt_mod._hlt_mo(eng, hst, ds, ctx.keys, plan.chunk,
+                                   ctx._jit)
+        if operands is None:            # single-DiagSet operands from arena
+            operands = ctx.arena.slot(
+                "pallas_operands", ds, (plan.level, plan.nbeta, plan.d_pad),
+                lambda: hlt_mod._build_pallas_operands(
+                    eng, ds, ctx.keys, plan.level, plan.nbeta, plan.d_pad))[1]
+        fn = ctx._pallas_pipeline(plan.level, plan.chunk, "single")
+        c0, c1 = fn(hst.digits, hst.c0_ext, hst.c1_ext, *operands)
+        return self._finish(c0, c1, hst.scale, ds)
+
+    def _run_batched_pallas(self, items) -> list:
+        ctx, plan = self.ctx, self.plan
+        hoisted, ct_slots = self._hoist_items(items)
+        digits = jnp.stack([h.digits for h in hoisted])
+        c0e = jnp.stack([h.c0_ext for h in hoisted])
+        c1e = jnp.stack([h.c1_ext for h in hoisted])
+        fn = ctx._pallas_pipeline(plan.level, plan.chunk, "indexed")
+        c0b, c1b = fn(digits, c0e, c1e, *self._operands,
+                      jnp.asarray(np.array(ct_slots, np.int32)),
+                      self._diag_slots)
+        return [self._finish(c0b[b], c1b[b], hoisted[ct_slots[b]].scale, ds)
+                for b, ds in enumerate(self._diags)]
+
+
+# ---------------------------------------------------------------------------
+# compile_hemm -> HEMMProgram
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HEMMPlan:
+    """Inspectable compile summary for one HE matrix multiplication."""
+    m: int
+    l: int
+    n: int
+    schedule: str
+    level: int                          # input level; output is level - 3
+    batched: bool
+    step1: HLTPlan
+    step2: HLTPlan
+    depth: int = 3
+
+    @property
+    def rotations(self) -> int:
+        return self.step1.rotations + self.step2.rotations
+
+    @property
+    def operand_bytes(self) -> int:
+        return self.step1.operand_bytes + self.step2.operand_bytes
+
+    @property
+    def operand_bytes_naive(self) -> int:
+        return self.step1.operand_bytes_naive + self.step2.operand_bytes_naive
+
+
+class HEMMProgram:
+    """A compiled Algorithm-2 HE MM: ``prog(ctA, ctB) -> ctC``.
+
+    Consumes 3 levels (2 HLTs + 1 Mult·Rescale).  Under the fused schedule
+    Step 1 runs {σ(A), τ(B)} as one batched launch and Step 2 runs all 2·l
+    HLTs as ONE slot-indexed launch storing only the 2 unique hoisting
+    products and 2·l unique diagonal sets (no l-fold operand replication).
+    """
+
+    def __init__(self, ctx: HEContext, mm_plan, plan: HEMMPlan,
+                 step1: "CompiledHLT", step2: "CompiledHLT"):
+        self.ctx = ctx
+        self.mm_plan = mm_plan
+        self.plan = plan
+        self._step1 = step1
+        self._step2 = step2
+        self._gen = ctx._generation
+
+    def __call__(self, ctA: Ciphertext, ctB: Ciphertext) -> Ciphertext:
+        self.ctx._check_generation(self._gen)
+        eng, keys, p = self.ctx.eng, self.ctx.keys, self.mm_plan
+        assert ctA.level == ctB.level == self.plan.level
+        if self.plan.batched:
+            ctA0, ctB0 = self._step1([ctA, ctB])
+            hstA, hstB = hoist_batched(eng, [ctA0, ctB0])
+            outs = self._step2([hstA] * p.l + [hstB] * p.l)
+        else:
+            s1a, s1b = self._step1
+            ctA0, ctB0 = s1a(ctA), s1b(ctB)
+            if self.plan.schedule == "baseline":
+                inA, inB = ctA0, ctB0
+            else:   # hoist once, reuse across all l Step-2 HLTs per input
+                inA, inB = hoist(eng, ctA0), hoist(eng, ctB0)
+            outs = ([run(inA) for run in self._step2[:p.l]]
+                    + [run(inB) for run in self._step2[p.l:]])
+        acc: Optional[Ciphertext] = None
+        for k in range(p.l):
+            prod = eng.rescale(eng.mult(outs[k], outs[p.l + k], keys))
+            acc = prod if acc is None else eng.add(acc, prod)
+        return acc
+
+
+def compile_hemm(ctx: HEContext, plan, *, level: Optional[int] = None,
+                 schedule: Optional[str] = None,
+                 rotation_chunk: Optional[int] = None,
+                 batched: Optional[bool] = None) -> HEMMProgram:
+    """Compile Algorithm 2 for a HeMMPlan (core/hemm.py plan_hemm) into a
+    reusable HEMMProgram.  ``schedule=None`` / ``rotation_chunk=None`` defer
+    to the cost model; ``batched=None`` batches whenever the fused schedule
+    is chosen.  Memoized on the context (same plan → same program)."""
+    assert ctx.keys is not None, "HEContext has no keys; call ctx.keygen()"
+    eng = ctx.eng
+    level = eng.params.L if level is None else level
+    nbeta = len(eng.tools.digit_bases(level))
+    if schedule is None:
+        schedule = select_schedule(eng.params, nbeta=nbeta)
+    if batched is None:
+        batched = schedule == "pallas"
+    batched = batched and schedule != "baseline"
+    memo_key = ("hemm", _StrongKey(plan), schedule, level, rotation_chunk,
+                batched)
+    hit = ctx._compiled.get(memo_key)
+    if hit is not None:
+        return hit
+
+    step2_sets = list(plan.ds_eps) + list(plan.ds_omega)
+    if batched:
+        step1 = compile_hlt(ctx, [plan.ds_sigma, plan.ds_tau], level=level,
+                            schedule=schedule, rotation_chunk=rotation_chunk)
+        step2 = compile_hlt(ctx, step2_sets, level=level - 1,
+                            schedule=schedule, rotation_chunk=rotation_chunk)
+        s1_plan, s2_plan = step1.plan, step2.plan
+    else:
+        c = lambda ds, lv: compile_hlt(ctx, ds, level=lv, schedule=schedule,
+                                       rotation_chunk=rotation_chunk)
+        step1 = (c(plan.ds_sigma, level), c(plan.ds_tau, level))
+        step2 = tuple(c(ds, level - 1) for ds in step2_sets)
+        s1_plan, s2_plan = step1[0].plan, step2[0].plan
+    prog = HEMMProgram(
+        ctx, plan,
+        HEMMPlan(m=plan.m, l=plan.l, n=plan.n, schedule=schedule, level=level,
+                 batched=batched, step1=s1_plan, step2=s2_plan),
+        step1, step2)
+    ctx._compiled[memo_key] = prog
+    return prog

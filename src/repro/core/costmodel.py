@@ -40,6 +40,53 @@ def pick_rotation_chunk(params: "HEParams", nbeta: int | None = None,
     return max(1, int((budget_rows - resident) // per_rotation))
 
 
+def select_schedule(params: "HEParams", nbeta: int | None = None,
+                    vmem_bytes: float = VMEM_BYTES,
+                    headroom: float = 0.75) -> str:
+    """Cost-model schedule pick for compile_hlt/compile_hemm (schedule=None).
+
+    The fused Pallas datapath needs its minimal per-grid-step working set —
+    the chunk=1 residency of pick_rotation_chunk's formula: β digit rows,
+    c0e/c1e, two accumulator rows, plus one rotation's operands (2β key rows,
+    a diagonal row and a perm row) — to fit the per-core VMEM budget.  When it
+    does (every shipped parameter set), the fused kernel is the schedule; when
+    a hypothetical parameter set overflows even chunk=1, fall back to the u64
+    limb-outer reference ("mo"), which streams per-row and has no residency
+    requirement.
+    """
+    nbeta = params.beta if nbeta is None else nbeta
+    row = 4.0 * params.N
+    min_working_set = (nbeta + 4 + 2 * nbeta + 2) * row
+    if min_working_set <= headroom * vmem_bytes:
+        return "pallas"
+    return "mo"
+
+
+def hlt_stage_costs(params: "HEParams", *, d: int, d_pad: int, nbeta: int,
+                    chunk: int, n_limbs_ext: int) -> dict:
+    """Per-stage byte / rotation counts of ONE fused-schedule HLT at a given
+    compile point (u32 word model) — attached to HLTPlan for inspection.
+
+    bytes = operand traffic the stage streams through VMEM per ciphertext;
+    rotations = real (non-padding) rotations the stage performs.
+    """
+    row = 4 * params.N
+    m = n_limbs_ext
+    return {
+        "hoist": {                       # Decomp/ModUp digits + raised c0/c1
+            "bytes": (nbeta + 2) * m * row, "rotations": 0},
+        "automorph": {                   # per-rotation perm-table gather
+            "bytes": d_pad * (1 + nbeta) * m * row, "rotations": d},
+        "keyip": {                       # 2β rot-key rows per rotation
+            "bytes": 2 * nbeta * d_pad * m * row, "rotations": d},
+        "diagip": {                      # one diagonal row per rotation
+            "bytes": d_pad * m * row, "rotations": d},
+        "moddown": {                     # merged ModDown+Rescale in/out
+            "bytes": 2 * m * row, "rotations": 0},
+        "chunk": chunk,
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class CostModel:
     params: HEParams

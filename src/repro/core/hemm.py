@@ -8,6 +8,12 @@ Key schedule-level optimization carried from the paper: the hoisting product
 of Ct_{A^(0)} / Ct_{B^(0)} is computed ONCE and reused across all l ε^k / ω^k
 HLTs of Step 2 (Algorithm 3 lines 1–2 amortized over Step 2's 2·l HLTs).
 
+This module holds the *math plan* (transformation matrices, diagonal counts,
+HeMMPlan with the encoded DiagSets).  Execution goes through the
+plan/compile/execute API: ``compile_hemm(ctx, plan)`` (core/compile.py)
+returns a reusable HEMMProgram; the ``hemm()`` function below is a
+DEPRECATED string-threaded shim kept for the old call style.
+
 Baselines (paper §VI-A) are provided in two forms:
  * runnable: E2DM-S (pad to square), E2DM-R (pad to rect-compatible),
    Huang et al. (general method, unhoisted per-rotation KeySwitch schedule),
@@ -18,14 +24,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import hlt as hlt_mod
 from repro.core.ckks import Ciphertext, CkksEngine, Keys
-from repro.core.hlt import DiagSet, encode_diagonals, hoist
+from repro.core.hlt import DiagSet, encode_diagonals
 
 
 # ---------------------------------------------------------------------------
@@ -156,49 +161,18 @@ def hemm(eng: CkksEngine, ctA: Ciphertext, ctB: Ciphertext, plan: HeMMPlan,
          batched: Optional[bool] = None) -> Ciphertext:
     """Algorithm 2. Consumes 3 levels (2 HLTs + 1 Mult·Rescale); L >= 4.
 
-    ``batched`` (default: on for schedule="pallas") runs Step 1 as one batched
-    HLT over {σ(A), τ(B)} and Step 2's 2·l HLTs as ONE batched fused-kernel
-    pipeline (hlt_batched) instead of 2·l sequential launches."""
-    if batched is None:
-        batched = schedule == "pallas"
-    if batched and schedule != "baseline":
-        return _hemm_batched(eng, ctA, ctB, plan, keys, schedule,
-                             rotation_chunk)
-    H = lambda ct, ds, hst=None: hlt_mod.hlt(
-        eng, ct, ds, keys, schedule=schedule, rotation_chunk=rotation_chunk,
-        hoisted=hst)
-    # Step 1
-    ctA0 = H(ctA, plan.ds_sigma)
-    ctB0 = H(ctB, plan.ds_tau)
-    # Step 2 — hoist once, reuse across all l HLTs of each input
-    hstA = hoist(eng, ctA0) if schedule != "baseline" else None
-    hstB = hoist(eng, ctB0) if schedule != "baseline" else None
-    acc: Optional[Ciphertext] = None
-    for k in range(plan.l):
-        ctAk = H(ctA0, plan.ds_eps[k], hstA)
-        ctBk = H(ctB0, plan.ds_omega[k], hstB)
-        prod = eng.rescale(eng.mult(ctAk, ctBk, keys))
-        acc = prod if acc is None else eng.add(acc, prod)
-    return acc
-
-
-def _hemm_batched(eng: CkksEngine, ctA: Ciphertext, ctB: Ciphertext,
-                  plan: HeMMPlan, keys: Keys, schedule: str,
-                  rotation_chunk: Optional[int]) -> Ciphertext:
-    """Algorithm 2 with both steps as batched HLT pipelines."""
-    ctA0, ctB0 = hlt_mod.hlt_batched(
-        eng, [(ctA, plan.ds_sigma), (ctB, plan.ds_tau)], keys,
-        schedule=schedule, rotation_chunk=rotation_chunk)
-    hstA, hstB = hoist(eng, ctA0), hoist(eng, ctB0)
-    items = ([(hstA, plan.ds_eps[k]) for k in range(plan.l)]
-             + [(hstB, plan.ds_omega[k]) for k in range(plan.l)])
-    cts = hlt_mod.hlt_batched(eng, items, keys, schedule=schedule,
-                              rotation_chunk=rotation_chunk)
-    acc: Optional[Ciphertext] = None
-    for k in range(plan.l):
-        prod = eng.rescale(eng.mult(cts[k], cts[plan.l + k], keys))
-        acc = prod if acc is None else eng.add(acc, prod)
-    return acc
+    DEPRECATED shim: compiles an HEMMProgram on an internally pooled
+    HEContext and runs it.  New code should call ``compile_hemm`` once and
+    reuse the program (core/compile.py)."""
+    warnings.warn(
+        "hemm(..., schedule=...) is deprecated: build an HEContext and use "
+        "repro.core.compile.compile_hemm instead.", DeprecationWarning,
+        stacklevel=2)
+    from repro.core.compile import compile_hemm, legacy_context
+    prog = compile_hemm(legacy_context(eng, keys), plan, level=ctA.level,
+                        schedule=schedule, rotation_chunk=rotation_chunk,
+                        batched=batched)
+    return prog(ctA, ctB)
 
 
 # ---------------------------------------------------------------------------
@@ -242,12 +216,13 @@ def hemm_baseline(eng: CkksEngine, name: str, A: np.ndarray, B: np.ndarray,
                   keys_factory, rng: np.random.Generator):
     """Run a baseline end-to-end. keys_factory(rot_steps) -> Keys (so each
     baseline gets exactly the rotation keys its plan needs)."""
+    from repro.core.compile import HEContext, compile_hemm
     m, l, n = A.shape[0], A.shape[1], B.shape[1]
     spec = baseline_spec(name, m, l, n)
     mp, lp, np_ = spec.pad_shape
     plan = plan_hemm(eng, mp, lp, np_)
-    keys = keys_factory(plan.rot_steps)
-    ctA = encrypt_matrix(eng, keys, _pad(A, mp, lp), rng)
-    ctB = encrypt_matrix(eng, keys, _pad(B, lp, np_), rng)
-    ct = hemm(eng, ctA, ctB, plan, keys, schedule=spec.schedule)
-    return decrypt_matrix(eng, keys, ct, mp, np_)[:m, :n], plan
+    ctx = HEContext(eng, keys_factory(plan.rot_steps))
+    ctA = encrypt_matrix(eng, ctx.keys, _pad(A, mp, lp), rng)
+    ctB = encrypt_matrix(eng, ctx.keys, _pad(B, lp, np_), rng)
+    ct = compile_hemm(ctx, plan, schedule=spec.schedule)(ctA, ctB)
+    return decrypt_matrix(eng, ctx.keys, ct, mp, np_)[:m, :n], plan

@@ -18,15 +18,29 @@ Four schedules, mathematically equivalent (verified bit-exactly in tests):
 * ``pallas``    — the same limb-outer schedule driven through the fused
   Automorph→KeyIP→DiagIP Pallas kernel (kernels/fused_hlt.py) on the u32
   Montgomery datapath: rotation keys and diagonal plaintexts are converted to
-  the Montgomery domain once per (level, DiagSet) and cached on the DiagSet,
-  d is padded up to a rotation-chunk multiple with zero-diagonal identity
-  entries, and the chunk defaults to the cost model's VMEM budget
-  (core/costmodel.py pick_rotation_chunk). Bit-exact vs ``mo``/``hoisted``.
-  ``hlt_batched`` stacks a leading ciphertext axis so many HLTs (the 2·l
-  Step-2 HLTs of hemm, or the tile HLTs of block MM) run as ONE kernel
-  pipeline sharing the precompute. Limb-parallel sharding at the distributed
-  level rides the same schedule (BaseConv is the only limb-coupling stage,
-  hence the only collective).
+  the Montgomery domain once per (level, DiagSet), d is padded up to a
+  rotation-chunk multiple with zero-diagonal identity entries, and the chunk
+  defaults to the cost model's VMEM budget (core/costmodel.py
+  pick_rotation_chunk). Bit-exact vs ``mo``/``hoisted``.
+
+This module holds the HLT *math*: diagonal encoding, hoisting (single and
+batched across the ciphertext axis), the reference schedule implementations,
+and the Montgomery operand builder for the fused kernel.  The public entry
+point is the plan → compile → execute API in ``core/compile.py``::
+
+    ctx = HEContext(CkksEngine(params));  ctx.keygen(rng, rot_steps)
+    run = compile_hlt(ctx, diags, level=ct.level)      # cost model runs ONCE
+    ct_out = run(ct)                                   # compiled, reusable
+
+``compile_hlt`` picks the schedule / rotation chunk / d-padding from the cost
+model and returns a ``CompiledHLT`` with an inspectable ``.plan``; batched
+compiles store each unique operand tensor ONCE in the context's arena and the
+fused kernel gathers by slot index (kernels/fused_hlt.py fused_hlt_indexed).
+All precompute is owned by the ``HEContext`` (nothing hides in module globals
+or on DiagSet instances); ``ctx.invalidate()`` drops it after a re-keygen.
+
+``hlt()`` / ``hlt_batched()`` below are thin DEPRECATED shims kept for the
+old string-threaded call style; they build a context internally and delegate.
 
 The a-part (c0) is "scale-raised" into PQ_ℓ (multiply by [P]_{q_i}, zero on
 special limbs) so DiagIP can accumulate both output polys in the extended
@@ -36,14 +50,14 @@ basis and share the single final ModDown — this is how Algorithm 3's
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import automorph, modmath as mm, ntt
+from repro.core import automorph, modmath as mm
 from repro.core.ckks import Ciphertext, CkksEngine, Keys, Plaintext
 
 
@@ -110,27 +124,57 @@ def encode_diagonals(eng: CkksEngine, U: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def hoist(eng: CkksEngine, ct: Ciphertext) -> Hoisted:
-    """Decomp + ModUp once (Algorithm 3 lines 1–2)."""
+def _hoist_body(eng: CkksEngine, level: int):
+    """Traceable (c0, c1) -> (digits, c0_ext, c1_ext) hoisting body at a fixed
+    level — shared verbatim by hoist() and (under vmap) hoist_batched()."""
     p = eng.params
-    ell = ct.level
-    bases = eng.tools.digit_bases(ell)
+    bases = eng.tools.digit_bases(level)
     full = bases[0][2]
     pos = {g: i for i, g in enumerate(full)}
-    digs = []
-    for (own, gen, _) in bases:
-        dig_eval = ct.c1[own[0]: own[-1] + 1]
-        coeff = eng._intt(dig_eval, eng.basis(own))
-        ext = eng.tools.mod_up(coeff, own, gen)
-        ext_eval = eng._ntt(ext, eng.basis(gen))
-        x = jnp.zeros((len(full), p.N), dtype=jnp.uint32)
-        x = x.at[np.array([pos[i] for i in own])].set(dig_eval)
-        x = x.at[np.array([pos[i] for i in gen])].set(ext_eval)
-        digs.append(x)
-    return Hoisted(digits=jnp.stack(digs),
-                   c0_ext=_scale_raise(eng, ct.c0, ell),
-                   c1_ext=_scale_raise(eng, ct.c1, ell),
-                   level=ell, scale=ct.scale)
+
+    def body(c0, c1):
+        digs = []
+        for (own, gen, _) in bases:
+            dig_eval = c1[own[0]: own[-1] + 1]
+            coeff = eng._intt(dig_eval, eng.basis(own))
+            ext = eng.tools.mod_up(coeff, own, gen)
+            ext_eval = eng._ntt(ext, eng.basis(gen))
+            x = jnp.zeros((len(full), p.N), dtype=jnp.uint32)
+            x = x.at[np.array([pos[i] for i in own])].set(dig_eval)
+            x = x.at[np.array([pos[i] for i in gen])].set(ext_eval)
+            digs.append(x)
+        return (jnp.stack(digs), _scale_raise(eng, c0, level),
+                _scale_raise(eng, c1, level))
+
+    return body
+
+
+def hoist(eng: CkksEngine, ct: Ciphertext) -> Hoisted:
+    """Decomp + ModUp once (Algorithm 3 lines 1–2)."""
+    digits, c0e, c1e = _hoist_body(eng, ct.level)(ct.c0, ct.c1)
+    return Hoisted(digits=digits, c0_ext=c0e, c1_ext=c1e,
+                   level=ct.level, scale=ct.scale)
+
+
+def hoist_batched(eng: CkksEngine, cts: Sequence[Ciphertext]) -> list:
+    """Decomp + ModUp across the ciphertext axis: N hoisting products as ONE
+    vmapped pipeline instead of a per-ciphertext Python loop (the last such
+    loop in the batched block-MM path).  All cts must share one level.
+    Bit-exact vs a loop of hoist() calls (same traced body, vmapped)."""
+    cts = list(cts)
+    if not cts:
+        return []
+    levels = {ct.level for ct in cts}
+    assert len(levels) == 1, f"hoist_batched needs one common level: {levels}"
+    level = cts[0].level
+    if len(cts) == 1:
+        return [hoist(eng, cts[0])]
+    c0s = jnp.stack([ct.c0 for ct in cts])
+    c1s = jnp.stack([ct.c1 for ct in cts])
+    digits, c0e, c1e = jax.vmap(_hoist_body(eng, level))(c0s, c1s)
+    return [Hoisted(digits=digits[b], c0_ext=c0e[b], c1_ext=c1e[b],
+                    level=level, scale=ct.scale)
+            for b, ct in enumerate(cts)]
 
 
 def _scale_raise(eng: CkksEngine, x, ell: int):
@@ -184,53 +228,51 @@ def _perm_table(eng: CkksEngine, zs) -> np.ndarray:
 
 SCHEDULES = ("baseline", "hoisted", "mo", "pallas")
 
+_DEPRECATION = ("%s is deprecated: build an HEContext and use "
+                "repro.core.compile.compile_hlt / compile_hemm (the "
+                "plan/compile/execute API) instead.")
+
 
 def hlt(eng: CkksEngine, ct: Ciphertext, diags: DiagSet, keys: Keys,
         schedule: str = "mo", rotation_chunk: Optional[int] = None,
         hoisted: Optional[Hoisted] = None) -> Ciphertext:
-    """Ct' = Rescale( Σ_t u_{z_t} ⊙ Rot(Ct; z_t) )  — Algorithm 1's semantics."""
-    if schedule == "baseline":
-        return _hlt_baseline(eng, ct, diags, keys)
-    hst = hoisted if hoisted is not None else hoist(eng, ct)
-    if schedule == "hoisted":
-        return _hlt_hoisted(eng, hst, diags, keys)
-    if schedule == "mo":
-        return _hlt_mo(eng, hst, diags, keys, rotation_chunk)
-    if schedule == "pallas":
-        return _hlt_pallas(eng, hst, diags, keys, rotation_chunk)
-    raise ValueError(schedule)
+    """Ct' = Rescale( Σ_t u_{z_t} ⊙ Rot(Ct; z_t) )  — Algorithm 1's semantics.
+
+    DEPRECATED shim: compiles through the plan/compile/execute API on an
+    internally pooled HEContext. New code should call ``compile_hlt`` once and
+    reuse the CompiledHLT."""
+    warnings.warn(_DEPRECATION % "hlt()", DeprecationWarning, stacklevel=2)
+    from repro.core.compile import compile_hlt, legacy_context
+    # baseline has no hoisting product — it always re-rotates the full ct
+    # (a supplied ``hoisted`` is ignored there, matching the old dispatch)
+    item = ct if schedule == "baseline" or hoisted is None else hoisted
+    run = compile_hlt(legacy_context(eng, keys), diags, level=item.level,
+                      schedule=schedule, rotation_chunk=rotation_chunk)
+    return run(item)
 
 
 def hlt_batched(eng: CkksEngine, items: Sequence, keys: Keys,
                 schedule: str = "pallas",
                 rotation_chunk: Optional[int] = None) -> list:
-    """Apply many HLTs as ONE batched pipeline.
+    """Apply many HLTs as ONE batched pipeline over ``(ct_or_hoisted,
+    DiagSet)`` pairs at a common level.
 
-    ``items`` is a sequence of ``(ct_or_hoisted, DiagSet)`` pairs, all at the
-    same level. Under ``schedule="pallas"`` the hoisting products are stacked
-    along a leading ciphertext axis and every (Automorph→KeyIP→DiagIP) runs in
-    a single fused kernel launch sharing one Montgomery key/diagonal
-    precompute (diagonal sets are padded to a common rotation count); the
-    merged ModDown+Rescale is vmapped over the batch. Other schedules fall
-    back to a loop of single-ciphertext ``hlt`` calls (same results —
-    bit-exact for mo/hoisted; used as the oracle in tests).
+    DEPRECATED shim over ``compile_hlt(ctx, [ds...], level=...)``; the
+    compiled path stores each unique hoisting product / diagonal set once
+    (slot-indexed kernel) instead of stacking B-fold copies.
 
     Returns a list of Ciphertexts, one per item, in order.
     """
-    if schedule == "baseline":
-        assert all(not isinstance(it, Hoisted) for it, _ in items), \
-            "schedule='baseline' has no hoisting product; pass Ciphertexts"
-        return [hlt(eng, ct, ds, keys, schedule="baseline")
-                for ct, ds in items]
-    items = [(it if isinstance(it, Hoisted) else hoist(eng, it), ds)
-             for (it, ds) in items]
-    levels = {h.level for h, _ in items}
+    warnings.warn(_DEPRECATION % "hlt_batched()", DeprecationWarning,
+                  stacklevel=2)
+    from repro.core.compile import compile_hlt, legacy_context
+    items = list(items)
+    levels = {it.level for it, _ in items}
     assert len(levels) == 1, f"hlt_batched needs one common level, got {levels}"
-    if schedule != "pallas":
-        return [hlt(eng, None, ds, keys, schedule=schedule,
-                    rotation_chunk=rotation_chunk, hoisted=h)
-                for h, ds in items]
-    return _hlt_pallas_batched(eng, items, keys, rotation_chunk)
+    run = compile_hlt(legacy_context(eng, keys), [ds for _, ds in items],
+                      level=levels.pop(), schedule=schedule,
+                      rotation_chunk=rotation_chunk)
+    return run([it for it, _ in items])
 
 
 def _hlt_baseline(eng: CkksEngine, ct, diags: DiagSet, keys: Keys) -> Ciphertext:
@@ -294,13 +336,14 @@ def _hlt_hoisted(eng: CkksEngine, hst: Hoisted, diags: DiagSet, keys: Keys) -> C
     return _finish(eng, hst, diags, acc0, acc1)
 
 
-_MO_JIT_CACHE: dict = {}
-
-
-def _mo_pipeline(eng: CkksEngine, level: int, nbeta: int, d: int, chunk: int):
-    """Cached jitted limb-outer pipeline (incl. merged ModDown+Rescale)."""
-    key = (id(eng), level, nbeta, d, chunk)
-    fn = _MO_JIT_CACHE.get(key)
+def _mo_pipeline(eng: CkksEngine, level: int, nbeta: int, d: int, chunk: int,
+                 jit_cache: dict):
+    """Jitted limb-outer pipeline (incl. merged ModDown+Rescale), memoized in
+    the CALLER-OWNED ``jit_cache`` (an HEContext's) — never in a module
+    global keyed by id(eng), which can silently alias a garbage-collected
+    engine's id to a new engine with different moduli."""
+    key = ("mo", level, nbeta, d, chunk)
+    fn = jit_cache.get(key)
     if fn is not None:
         return fn
     p = eng.params
@@ -347,12 +390,12 @@ def _mo_pipeline(eng: CkksEngine, level: int, nbeta: int, d: int, chunk: int):
         return c0, c1
 
     fn = jax.jit(pipeline)
-    _MO_JIT_CACHE[key] = fn
+    jit_cache[key] = fn
     return fn
 
 
 def _hlt_mo(eng: CkksEngine, hst: Hoisted, diags: DiagSet, keys: Keys,
-            rotation_chunk: Optional[int]) -> Ciphertext:
+            rotation_chunk: Optional[int], jit_cache: dict) -> Ciphertext:
     """Limb-outer / rotation-inner schedule over the extended basis."""
     full = eng.tools.digit_bases(hst.level)[0][2]
     nbeta = hst.digits.shape[0]
@@ -362,7 +405,7 @@ def _hlt_mo(eng: CkksEngine, hst: Hoisted, diags: DiagSet, keys: Keys,
     is_id = jnp.asarray(np.array([z == 0 for z in diags.zs]))   # (d,)
     d = diags.d
     chunk = d if rotation_chunk is None else max(1, min(rotation_chunk, d))
-    fn = _mo_pipeline(eng, hst.level, nbeta, d, chunk)
+    fn = _mo_pipeline(eng, hst.level, nbeta, d, chunk, jit_cache)
     c0, c1 = fn(hst.digits, hst.c0_ext, hst.c1_ext, u_all, rk0, rk1,
                 perms, is_id)
     q_ell = eng.ctx.moduli_host[hst.level]
@@ -376,36 +419,20 @@ def _reduce_add(x, q):
 
 
 # ---------------------------------------------------------------------------
-# pallas schedule: fused kernel wiring + batched pipeline
+# pallas schedule: Montgomery operand builder for the fused kernel
 # ---------------------------------------------------------------------------
 
 
-def _pick_chunk(eng: CkksEngine, nbeta: int, d: int,
-                rotation_chunk: Optional[int]) -> int:
-    """Rotation chunk from the VMEM budget (cost model) unless forced."""
-    if rotation_chunk is None:
-        from repro.core.costmodel import pick_rotation_chunk
-        rotation_chunk = pick_rotation_chunk(eng.params, nbeta=nbeta)
-    return max(1, min(rotation_chunk, d))
-
-
-def _pallas_operands(eng: CkksEngine, diags: DiagSet, keys: Keys, level: int,
-                     nbeta: int, d_pad: int):
+def _build_pallas_operands(eng: CkksEngine, diags: DiagSet, keys: Keys,
+                           level: int, nbeta: int, d_pad: int):
     """Montgomery-domain kernel operands for one DiagSet, padded to d_pad
-    rotations. Cached on the DiagSet (the per-(engine, level, DiagSet)
-    precompute): conversion of rot keys + diagonals to the Montgomery domain
-    happens once and is shared by every HLT over this DiagSet.
+    rotations: (u_m, rk0_m, rk1_m, perms, is_id).  PURE — caching/ownership
+    lives in the HEContext operand arena (core/compile.py), one slot per
+    unique (DiagSet, level, β, d_pad).
 
     Padding entries are identity rotations (perm = arange) with zero diagonal
     and is_id=1, so they bypass KeyIP and contribute exactly zero to DiagIP.
     """
-    cache = diags.__dict__.setdefault("_pallas_cache", {})
-    key = (level, nbeta, d_pad)
-    hit = cache.get(key)
-    # Identity (not id()) check on engine AND keys: after a re-keygen the old
-    # Keys object's id can be recycled, which must not serve stale rot keys.
-    if hit is not None and hit[0] is eng and hit[1] is keys:
-        return hit[2]
     p = eng.params
     full = eng.tools.digit_bases(level)[0][2]
     rows = np.asarray(full)
@@ -430,76 +457,4 @@ def _pallas_operands(eng: CkksEngine, diags: DiagSet, keys: Keys, level: int,
         perms = np.concatenate(
             [perms, np.tile(np.arange(p.N, dtype=np.int32), (pad, 1))], axis=0)
         is_id = np.concatenate([is_id, np.ones((pad, 1), np.int32)], axis=0)
-    out = (u_m, rk0_m, rk1_m, jnp.asarray(perms), jnp.asarray(is_id))
-    cache[key] = (eng, keys, out)
-    return out
-
-
-_PALLAS_JIT_CACHE: dict = {}
-
-
-def _pallas_pipeline(eng: CkksEngine, level: int, nbeta: int, d_pad: int,
-                     chunk: int, batch: Optional[int]):
-    """Cached jitted fused-kernel pipeline incl. merged ModDown+Rescale.
-    batch=None -> single-ciphertext kernel; batch=B -> batched kernel with a
-    vmapped ModDown over the leading ciphertext axis."""
-    key = (id(eng), level, nbeta, d_pad, chunk, batch)
-    fn = _PALLAS_JIT_CACHE.get(key)
-    if fn is not None:
-        return fn
-    from repro.kernels import ops
-    full = eng.tools.digit_bases(level)[0][2]
-    view = eng.basis(full)
-    q32, qneg = view.moduli_u32, view.qneg_inv
-
-    def single(digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id):
-        a0, a1 = ops.fused_hlt(digits, c0e, c1e, u_m, rk0_m, rk1_m,
-                               perms, is_id, q32, qneg, chunk=chunk)
-        return (eng._mod_down_eval(a0, level, drop_last=True),
-                eng._mod_down_eval(a1, level, drop_last=True))
-
-    def batched(digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id):
-        a0, a1 = ops.fused_hlt_batched(digits, c0e, c1e, u_m, rk0_m, rk1_m,
-                                       perms, is_id, q32, qneg, chunk=chunk)
-        down = jax.vmap(lambda a: eng._mod_down_eval(a, level, drop_last=True))
-        return down(a0), down(a1)
-
-    fn = jax.jit(single if batch is None else batched)
-    _PALLAS_JIT_CACHE[key] = fn
-    return fn
-
-
-def _hlt_pallas(eng: CkksEngine, hst: Hoisted, diags: DiagSet, keys: Keys,
-                rotation_chunk: Optional[int]) -> Ciphertext:
-    """Limb-outer schedule through the fused Pallas kernel (u32 Montgomery)."""
-    nbeta = hst.digits.shape[0]
-    chunk = _pick_chunk(eng, nbeta, diags.d, rotation_chunk)
-    d_pad = -(-diags.d // chunk) * chunk
-    ops_ = _pallas_operands(eng, diags, keys, hst.level, nbeta, d_pad)
-    fn = _pallas_pipeline(eng, hst.level, nbeta, d_pad, chunk, batch=None)
-    c0, c1 = fn(hst.digits, hst.c0_ext, hst.c1_ext, *ops_)
-    q_ell = eng.ctx.moduli_host[hst.level]
-    return Ciphertext(c0, c1, hst.level - 1,
-                      hst.scale * diags.scale / q_ell)
-
-
-def _hlt_pallas_batched(eng: CkksEngine, items, keys: Keys,
-                        rotation_chunk: Optional[int]) -> list:
-    """One fused-kernel launch over a stacked leading ciphertext axis."""
-    level = items[0][0].level
-    nbeta = items[0][0].digits.shape[0]
-    d_max = max(ds.d for _, ds in items)
-    chunk = _pick_chunk(eng, nbeta, d_max, rotation_chunk)
-    d_pad = -(-d_max // chunk) * chunk
-    per = [_pallas_operands(eng, ds, keys, level, nbeta, d_pad)
-           for _, ds in items]
-    digits = jnp.stack([h.digits for h, _ in items])
-    c0e = jnp.stack([h.c0_ext for h, _ in items])
-    c1e = jnp.stack([h.c1_ext for h, _ in items])
-    stacked = [jnp.stack([p[i] for p in per]) for i in range(5)]
-    fn = _pallas_pipeline(eng, level, nbeta, d_pad, chunk, batch=len(items))
-    c0b, c1b = fn(digits, c0e, c1e, *stacked)
-    q_ell = eng.ctx.moduli_host[level]
-    return [Ciphertext(c0b[b], c1b[b], level - 1,
-                       h.scale * ds.scale / q_ell)
-            for b, (h, ds) in enumerate(items)]
+    return (u_m, rk0_m, rk1_m, jnp.asarray(perms), jnp.asarray(is_id))

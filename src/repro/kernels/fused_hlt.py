@@ -15,12 +15,22 @@ Chunk is chosen from the cost model (core/costmodel.py pick_rotation_chunk)
 so this fits the per-core VMEM budget (configs/fame_sets.py scratchpad
 analogue); core/hlt.py pads d up to a chunk multiple before calling.
 
-Two entry points:
+Three entry points:
   * fused_hlt         — one ciphertext, grid (limbs, rot-chunks).
   * fused_hlt_batched — a stacked leading ciphertext axis, grid
     (batch, limbs, rot-chunks); rotation operands are per-batch-element so
     many HLTs (different hoisted cts AND different diagonal sets) run as one
     pipeline — the "large-scale consecutive HE MM" workload.
+  * fused_hlt_indexed — the batched pipeline over DEDUPED operand slots:
+    hoisting products and rotation operands are stored once per UNIQUE
+    tensor and two scalar-prefetch index vectors (ct_slots, diag_slots) map
+    batch index -> slot.  The BlockSpec index maps read the prefetched slot
+    vectors (pltpu.PrefetchScalarGridSpec), so batch element b DMAs the
+    digit rows of slot ct_slots[b] and the key/diagonal tile of slot
+    diag_slots[b] straight from the unique-operand arrays — nothing is
+    replicated B-fold in HBM.  This is what lets hemm Step-2 run 2·l HLTs
+    off 2 stored hoisting products and block MM σ/τ-transform every tile
+    off ONE stored key/diagonal set per transform.
 """
 from __future__ import annotations
 
@@ -29,6 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import modmath as mm
 
@@ -163,3 +174,81 @@ def fused_hlt_batched(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id, q32,
                    jax.ShapeDtypeStruct((B, M, N), jnp.uint32)],
         interpret=interpret,
     )(digits, c0e, c1e, u_mont, rk0, rk1, perms, q32, qneg, is_id)
+
+
+def _fused_kernel_indexed(cts_ref, dgs_ref, dig_ref, c0e_ref, c1e_ref, u_ref,
+                          rk0_ref, rk1_ref, perm_ref, q_ref, qneg_ref, id_ref,
+                          a0_ref, a1_ref, *, nbeta: int, chunk: int):
+    """Body is identical to the batched kernel; the slot indirection lives
+    entirely in the BlockSpec index maps (cts_ref/dgs_ref are the prefetched
+    slot vectors, already consumed by the DMA engine)."""
+    del cts_ref, dgs_ref
+    rblk = pl.program_id(2)
+    q = q_ref[0, 0]
+    qneg = qneg_ref[0, 0]
+    dig = dig_ref[0, :, 0, :]                    # (β, N) resident
+    c0e = c0e_ref[0, 0, :]
+    c1e = c1e_ref[0, 0, :]
+
+    @pl.when(rblk == 0)
+    def _init():
+        a0_ref[0, 0, :] = jnp.zeros_like(c0e)
+        a1_ref[0, 0, :] = jnp.zeros_like(c1e)
+
+    a0, a1 = _rot_chunk_body(
+        a0_ref[0, 0, :], a1_ref[0, 0, :], dig, c0e, c1e,
+        u_ref[0, :, 0, :], rk0_ref[0, :, :, 0, :], rk1_ref[0, :, :, 0, :],
+        perm_ref[0], id_ref[0, :, 0], q, qneg, nbeta=nbeta, chunk=chunk)
+    a0_ref[0, 0, :] = a0
+    a1_ref[0, 0, :] = a1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def fused_hlt_indexed(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id,
+                      ct_slots, diag_slots, q32, qneg, *,
+                      chunk: int = 8, interpret: bool = True):
+    """Slot-indexed batched fused HLT over deduped operands.
+
+    digits: (H, β, M, N); c0e/c1e: (H, M, N)      — H UNIQUE hoisting products
+    u_mont: (S, d, M, N); rk0/rk1: (S, d, β, M, N);
+    perms: (S, d, N) i32; is_id: (S, d, 1) i32    — S UNIQUE diagonal sets
+    ct_slots / diag_slots: (B,) i32               — batch index -> slot
+
+    Returns (acc0, acc1): (B, M, N).  Equivalent to fused_hlt_batched on
+    digits[ct_slots], u_mont[diag_slots], ... without materializing the
+    gathered B-fold operand copies: the scalar-prefetch index maps route each
+    grid step's DMA to the unique slot instead.
+    """
+    H, nbeta, M, N = digits.shape
+    B = ct_slots.shape[0]
+    d = u_mont.shape[1]
+    chunk = min(chunk, d)
+    assert d % chunk == 0, (d, chunk)
+    assert diag_slots.shape == (B,), (diag_slots.shape, B)
+    grid = (B, M, d // chunk)
+    dig_s = pl.BlockSpec((1, nbeta, 1, N),
+                         lambda b, i, r, cts, dgs: (cts[b], 0, i, 0))
+    vec_s = pl.BlockSpec((1, 1, N), lambda b, i, r, cts, dgs: (cts[b], i, 0))
+    u_s = pl.BlockSpec((1, chunk, 1, N),
+                       lambda b, i, r, cts, dgs: (dgs[b], r, i, 0))
+    rk_s = pl.BlockSpec((1, chunk, nbeta, 1, N),
+                        lambda b, i, r, cts, dgs: (dgs[b], r, 0, i, 0))
+    pm_s = pl.BlockSpec((1, chunk, N), lambda b, i, r, cts, dgs: (dgs[b], r, 0))
+    id_s = pl.BlockSpec((1, chunk, 1), lambda b, i, r, cts, dgs: (dgs[b], r, 0))
+    c_s = pl.BlockSpec((1, 1), lambda b, i, r, cts, dgs: (i, 0))
+    out_s = pl.BlockSpec((1, 1, N), lambda b, i, r, cts, dgs: (b, i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[dig_s, vec_s, vec_s, u_s, rk_s, rk_s, pm_s, c_s, c_s, id_s],
+        out_specs=[out_s, out_s],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel_indexed, nbeta=nbeta, chunk=chunk),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, M, N), jnp.uint32),
+                   jax.ShapeDtypeStruct((B, M, N), jnp.uint32)],
+        interpret=interpret,
+    )(ct_slots.astype(jnp.int32), diag_slots.astype(jnp.int32),
+      digits, c0e, c1e, u_mont, rk0, rk1, perms, q32, qneg, is_id)

@@ -7,10 +7,12 @@ HE MM (Algorithm 2). This module provides:
 * SecureMatmulEngine — block-MM driver: partitions an arbitrary (m × l)·(l × n)
   matmul into tiles that fit one ciphertext each (paper §VI-D: "the block MM
   approach encrypting a matrix with multiple Cts"), runs Algorithm 2 per tile
-  pair with hoisting reuse, and accumulates ciphertext partial sums. Under
-  schedule="pallas" the whole tile grid runs as a few batched fused-kernel
-  pipelines (core/hlt.py hlt_batched) instead of a sequential Python loop of
-  single-ciphertext hemm calls — each tile is σ/τ-transformed exactly once.
+  pair with hoisting reuse, and accumulates ciphertext partial sums.  The
+  engine owns an HEContext (core/compile.py) and drives the block MM through
+  compiled, slot-indexed HLT pipelines: every tile is σ/τ-transformed exactly
+  once per launch, the σ/τ rotation-key/diagonal tensors are stored ONCE in
+  the context's operand arena (not once per tile), and Decomp/ModUp hoisting
+  runs batched across the whole tile set.
 
 * SecureLinear — a drop-in linear layer: plaintext fast path for training,
   encrypted path for secure inference on layers flagged in
@@ -18,41 +20,56 @@ HE MM (Algorithm 2). This module provides:
 
 Block-MM cost scales with the paper's Table-I counts per tile; the engine
 reuses one rotation-key set across all tiles (the z-set of the tile shape).
+The ``schedule=`` constructor knob is a DEPRECATED shim: by default the cost
+model picks the schedule (core/costmodel.py select_schedule).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 import numpy as np
 
-from repro.core import hemm as hemm_mod
-from repro.core.ckks import CkksEngine, Ciphertext, Keys
-from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix, hemm
-from repro.core.hlt import hoist, hlt_batched
-from repro.core.params import HEParams, toy_params
+from repro.core.ckks import Ciphertext, CkksEngine, Keys
+from repro.core.compile import HEContext, compile_hemm, compile_hlt
+from repro.core.costmodel import select_schedule
+from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix
+from repro.core.hlt import hoist_batched
+from repro.core.params import HEParams
 
 
 @dataclasses.dataclass
 class SecureMatmulEngine:
     params: HEParams
     tile: int = 8                 # tile edge (tile² ≤ slots; paper: single-Ct MM)
-    schedule: str = "mo"
+    schedule: Optional[str] = None   # DEPRECATED: None = cost-model selection
     rotation_chunk: Optional[int] = None
-    batched: Optional[bool] = None   # default: batched iff schedule == "pallas"
+    batched: Optional[bool] = None   # default: batched iff fused schedule
 
     def __post_init__(self):
-        self.eng = CkksEngine(self.params)
+        self.ctx = HEContext(CkksEngine(self.params))
+        self.eng = self.ctx.eng
         assert 3 * self.tile * self.tile <= 2 * self.eng.params.slots
         self._plan = plan_hemm(self.eng, self.tile, self.tile, self.tile)
-        self._keys: Optional[Keys] = None
+        if self.schedule is None:
+            self.schedule = select_schedule(self.params)
+        else:
+            warnings.warn(
+                "SecureMatmulEngine(schedule=...) is deprecated: leave it "
+                "unset (the cost model selects the schedule) or compile "
+                "programs explicitly via repro.core.compile.",
+                DeprecationWarning, stacklevel=3)
         if self.batched is None:
             self.batched = self.schedule == "pallas"
 
+    @property
+    def _keys(self) -> Optional[Keys]:
+        return self.ctx.keys
+
     def keygen(self, rng: np.random.Generator) -> Keys:
-        self._keys = self.eng.keygen(rng, rot_steps=self._plan.rot_steps)
-        return self._keys
+        return self.ctx.keygen(rng, rot_steps=self._plan.rot_steps)
 
     # -- encryption of tiled matrices ---------------------------------------
 
@@ -63,8 +80,8 @@ class SecureMatmulEngine:
         gm, gn = math.ceil(m / t), math.ceil(n / t)
         P = np.zeros((gm * t, gn * t))
         P[:m, :n] = X
-        return [[encrypt_matrix(self.eng, self._keys, P[i * t:(i + 1) * t,
-                                                        j * t:(j + 1) * t], rng)
+        return [[encrypt_matrix(self.eng, self.ctx.keys,
+                                P[i * t:(i + 1) * t, j * t:(j + 1) * t], rng)
                  for j in range(gn)] for i in range(gm)]
 
     def matmul_encrypted(self, A_tiles, B_tiles,
@@ -72,14 +89,15 @@ class SecureMatmulEngine:
         """Block MM over ciphertext tiles: C[i][j] = Σ_k A[i][k]·B[k][j].
 
         batched=False — the sequential tile loop: one full Algorithm-2 hemm
-        per (i, j, k) tile pair (σ(A[i][k]) is recomputed for every j and
-        τ(B[k][j]) for every i).
+        program per (i, j, k) tile pair (σ(A[i][k]) is recomputed for every j
+        and τ(B[k][j]) for every i).
 
-        batched=True — the whole block MM as a handful of batched HLT
-        pipelines: ONE launch σ/τ-transforms every tile exactly once, then
-        each of the l Step-2 iterations transforms every A0/B0 tile in ONE
-        launch, all sharing one Montgomery key/diagonal precompute
-        (the paper's "large-scale consecutive HE MM" workload)."""
+        batched=True — the whole block MM as a handful of compiled
+        slot-indexed HLT pipelines: ONE launch σ/τ-transforms every tile
+        exactly once (σ/τ operands stored once in the arena, not per tile),
+        hoisting runs batched across all transformed tiles, then each of the
+        l Step-2 iterations transforms every A0/B0 tile in ONE launch (the
+        paper's "large-scale consecutive HE MM" workload)."""
         if batched is None:
             batched = self.batched
         gm, gl = len(A_tiles), len(A_tiles[0])
@@ -87,17 +105,15 @@ class SecureMatmulEngine:
         assert gl == len(B_tiles)
         if batched and self.schedule != "baseline":
             return self._matmul_encrypted_batched(A_tiles, B_tiles)
+        prog = compile_hemm(self.ctx, self._plan, schedule=self.schedule,
+                            rotation_chunk=self.rotation_chunk, batched=False)
         out = []
         for i in range(gm):
             row = []
             for j in range(gn):
                 acc: Optional[Ciphertext] = None
                 for k in range(gl):
-                    prod = hemm(self.eng, A_tiles[i][k], B_tiles[k][j],
-                                self._plan, self._keys,
-                                schedule=self.schedule,
-                                rotation_chunk=self.rotation_chunk,
-                                batched=False)
+                    prod = prog(A_tiles[i][k], B_tiles[k][j])
                     acc = prod if acc is None else self.eng.add(acc, prod)
                 row.append(acc)
             out.append(row)
@@ -105,33 +121,41 @@ class SecureMatmulEngine:
 
     def _matmul_encrypted_batched(self, A_tiles, B_tiles) -> list:
         """Batched block MM: gm·gl + gl·gn HLTs per pipeline stage instead of
-        gm·gl·gn·(2 + 2l) sequential single-ciphertext HLT launches."""
-        eng, plan, keys = self.eng, self._plan, self._keys
+        gm·gl·gn·(2 + 2l) sequential single-ciphertext HLT launches; operands
+        deduped to one arena slot per transform, hoisting vmapped across the
+        ciphertext axis."""
+        ctx, eng, plan = self.ctx, self.eng, self._plan
         sched, chunk = self.schedule, self.rotation_chunk
         gm, gl = len(A_tiles), len(A_tiles[0])
         gn = len(B_tiles[0])
         ik = [(i, k) for i in range(gm) for k in range(gl)]
         kj = [(k, j) for k in range(gl) for j in range(gn)]
-        # Step 1 — every tile transformed exactly once, one batched launch
-        items = ([(A_tiles[i][k], plan.ds_sigma) for i, k in ik]
-                 + [(B_tiles[k][j], plan.ds_tau) for k, j in kj])
-        outs = hlt_batched(eng, items, keys, schedule=sched,
-                           rotation_chunk=chunk)
-        hA0 = {ik[t]: hoist(eng, outs[t]) for t in range(len(ik))}
-        hB0 = {kj[t]: hoist(eng, outs[len(ik) + t]) for t in range(len(kj))}
+        level = A_tiles[0][0].level
+        # Step 1 — every tile transformed exactly once, one slot-indexed
+        # launch; σ/τ key+diagonal tensors stored once, not per tile.
+        step1 = compile_hlt(
+            ctx, [plan.ds_sigma] * len(ik) + [plan.ds_tau] * len(kj),
+            level=level, schedule=sched, rotation_chunk=chunk)
+        outs = step1([A_tiles[i][k] for i, k in ik]
+                     + [B_tiles[k][j] for k, j in kj])
+        # Decomp/ModUp across the whole tile set as ONE vmapped pipeline
+        hst = hoist_batched(eng, outs)
+        hA0 = {p: hst[t] for t, p in enumerate(ik)}
+        hB0 = {p: hst[len(ik) + t] for t, p in enumerate(kj)}
         # Step 2 — per inner iteration, ONE launch over all A0 and B0 tiles
         acc: list = [[None] * gn for _ in range(gm)]
         for kk in range(plan.l):
-            items = ([(hA0[p], plan.ds_eps[kk]) for p in ik]
-                     + [(hB0[p], plan.ds_omega[kk]) for p in kj])
-            res = hlt_batched(eng, items, keys, schedule=sched,
-                              rotation_chunk=chunk)
+            step2 = compile_hlt(
+                ctx, [plan.ds_eps[kk]] * len(ik) + [plan.ds_omega[kk]] * len(kj),
+                level=level - 1, schedule=sched, rotation_chunk=chunk)
+            res = step2([hA0[p] for p in ik] + [hB0[p] for p in kj])
             Ak = {p: res[t] for t, p in enumerate(ik)}
             Bk = {p: res[len(ik) + t] for t, p in enumerate(kj)}
             for i in range(gm):
                 for j in range(gn):
                     for k in range(gl):
-                        prod = eng.rescale(eng.mult(Ak[i, k], Bk[k, j], keys))
+                        prod = eng.rescale(
+                            eng.mult(Ak[i, k], Bk[k, j], ctx.keys))
                         acc[i][j] = (prod if acc[i][j] is None
                                      else eng.add(acc[i][j], prod))
         return acc
@@ -143,13 +167,13 @@ class SecureMatmulEngine:
         for i in range(gm):
             for j in range(gn):
                 out[i * t:(i + 1) * t, j * t:(j + 1) * t] = decrypt_matrix(
-                    self.eng, self._keys, C_tiles[i][j], t, t)
+                    self.eng, self.ctx.keys, C_tiles[i][j], t, t)
         return out[:m, :n]
 
     def secure_matmul(self, A: np.ndarray, B: np.ndarray,
                       rng: np.random.Generator) -> np.ndarray:
         """End to end: encrypt both inputs, block HE MM, decrypt."""
-        if self._keys is None:
+        if self.ctx.keys is None:
             self.keygen(rng)
         At = self.encrypt_tiles(A, rng)
         Bt = self.encrypt_tiles(B, rng)
@@ -164,7 +188,7 @@ class SecureLinear:
                  rng: np.random.Generator):
         self.engine = engine
         self.W = W
-        if engine._keys is None:
+        if engine.ctx.keys is None:
             engine.keygen(rng)
         self._w_tiles = engine.encrypt_tiles(W, rng)   # model stays encrypted
 

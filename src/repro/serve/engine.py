@@ -21,9 +21,11 @@ class ServeConfig:
     max_batch: int = 8
     max_len: int = 512
     temperature: float = 0.0       # 0 = greedy
-    # secure (HE) layer serving — threads down to the fused Pallas HLT
-    # datapath (core/hlt.py schedule="pallas", kernels/fused_hlt.py)
-    he_schedule: str = "pallas"
+    # secure (HE) layer serving — the engine owns an HEContext and compiles
+    # slot-indexed HLT pipelines (core/compile.py).  he_schedule=None defers
+    # to the cost model (select_schedule); setting it is the DEPRECATED
+    # string-threaded override.
+    he_schedule: Optional[str] = None
     he_tile: int = 8
     he_rotation_chunk: Optional[int] = None   # None = cost-model VMEM pick
 
@@ -31,9 +33,10 @@ class ServeConfig:
 def build_secure_linears(cfg: ModelConfig, scfg: ServeConfig, weights: dict,
                          rng: np.random.Generator, he_params=None) -> dict:
     """Construct SecureLinear layers for ``cfg.secure_layers`` sharing ONE
-    SecureMatmulEngine (one CKKS context + key set + HLT precompute), wired to
-    the serving config's HE knobs. ``weights`` maps layer index -> (in, out)
-    weight matrix; only indices flagged secure are lifted to HE."""
+    SecureMatmulEngine (one HEContext: CKKS engine + key set + operand
+    arena), wired to the serving config's HE knobs. ``weights`` maps layer
+    index -> (in, out) weight matrix; only indices flagged secure are lifted
+    to HE."""
     from repro.core.params import toy_params
     from repro.secure import SecureLinear, SecureMatmulEngine
     if not cfg.secure_layers:

@@ -1,0 +1,275 @@
+"""Plan/compile/execute API (core/compile.py): compiled-object reuse is
+bit-exact vs a fresh compile, the operand arena stores exactly ONE copy of
+shared tensors (slot count == unique operands, not batch size), re-keygen
+invalidates every cached operand/pipeline, the deprecated ``schedule=`` shims
+warn AND match the new API bit-exactly, and a dropped engine's recycled id
+can never serve a stale jitted pipeline (the old _MO_JIT_CACHE bug)."""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import hlt as hlt_mod
+from repro.core.ckks import CkksEngine
+from repro.core.compile import (HEContext, compile_hemm, compile_hlt,
+                                legacy_context)
+from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix
+from repro.core.hlt import hoist, hoist_batched
+from repro.core.params import toy_params
+
+TOY = toy_params(logN=6, L=4, k=3, beta=2, scale_bits=26)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(7)
+    ctx = HEContext(CkksEngine(TOY))
+    m, l, n = 4, 3, 5
+    plan = plan_hemm(ctx.eng, m, l, n)
+    ctx.keygen(rng, rot_steps=plan.rot_steps)
+    A = rng.uniform(-1, 1, (m, l))
+    B = rng.uniform(-1, 1, (l, n))
+    return dict(ctx=ctx, rng=rng, plan=plan, A=A, B=B, shape=(m, l, n),
+                ctA=encrypt_matrix(ctx.eng, ctx.keys, A, rng),
+                ctB=encrypt_matrix(ctx.eng, ctx.keys, B, rng))
+
+
+def _assert_ct_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.c0), np.asarray(b.c0))
+    np.testing.assert_array_equal(np.asarray(a.c1), np.asarray(b.c1))
+    assert a.level == b.level and a.scale == b.scale
+
+
+# -- compiled-object reuse -----------------------------------------------
+
+
+def test_compile_memo_returns_same_object(setup):
+    s = setup
+    r1 = compile_hlt(s["ctx"], s["plan"].ds_sigma, level=s["ctA"].level)
+    r2 = compile_hlt(s["ctx"], s["plan"].ds_sigma, level=s["ctA"].level)
+    assert r1 is r2
+    p1 = compile_hemm(s["ctx"], s["plan"])
+    p2 = compile_hemm(s["ctx"], s["plan"])
+    assert p1 is p2
+
+
+def test_compiled_reuse_bit_exact_vs_fresh_compile(setup):
+    """Reusing one CompiledHLT across calls == compiling fresh on a NEW
+    context over the same engine/keys, bit for bit."""
+    s = setup
+    ctx = s["ctx"]
+    run = compile_hlt(ctx, s["plan"].ds_sigma, level=s["ctA"].level)
+    first = run(s["ctA"])
+    again = run(s["ctA"])                       # reuse: warm arena + jit
+    fresh_ctx = HEContext(ctx.eng, ctx.keys)    # cold arena + jit
+    fresh = compile_hlt(fresh_ctx, s["plan"].ds_sigma,
+                        level=s["ctA"].level)(s["ctA"])
+    _assert_ct_equal(first, again)
+    _assert_ct_equal(first, fresh)
+
+
+def test_hemm_program_correct_and_schedules_bit_exact(setup):
+    s = setup
+    m, l, n = s["shape"]
+    prog = compile_hemm(s["ctx"], s["plan"])
+    assert prog.plan.schedule == "pallas"       # cost-model pick on TOY
+    ctC = prog(s["ctA"], s["ctB"])
+    got = decrypt_matrix(s["ctx"].eng, s["ctx"].keys, ctC, m, n)
+    np.testing.assert_allclose(got, s["A"] @ s["B"], atol=0.05)
+    for sched in ("mo", "hoisted"):
+        alt = compile_hemm(s["ctx"], s["plan"], schedule=sched)
+        _assert_ct_equal(alt(s["ctA"], s["ctB"]), ctC)
+
+
+# -- operand arena dedup --------------------------------------------------
+
+
+def test_arena_one_slot_per_unique_operand(setup):
+    """Batched compile over B items with S unique DiagSets allocates S
+    operand slots (and S arena entries) — NOT B."""
+    s = setup
+    ctx = HEContext(s["ctx"].eng, s["ctx"].keys)    # fresh arena to count
+    plan = s["plan"]
+    diags = [plan.ds_sigma, plan.ds_tau, plan.ds_sigma, plan.ds_sigma,
+             plan.ds_tau]                            # B=5, unique=2
+    run = compile_hlt(ctx, diags, level=s["ctA"].level, schedule="pallas")
+    assert run.plan.batch == 5
+    assert run.plan.n_diag_slots == 2
+    assert run.plan.diag_slots == (0, 1, 0, 0, 1)
+    assert len(ctx.arena) == 2
+    assert run.plan.operand_bytes_naive > run.plan.operand_bytes
+    # a second program over the same sets adds NO arena entries
+    compile_hlt(ctx, [plan.ds_tau, plan.ds_sigma], level=s["ctA"].level,
+                schedule="pallas")
+    assert len(ctx.arena) == 2
+    # execution is bit-exact vs singles, with repeated cts deduped too
+    items = [s["ctA"], s["ctB"], s["ctA"], s["ctB"], s["ctA"]]
+    outs = run(items)
+    for it, ds, out in zip(items, diags, outs):
+        single = compile_hlt(ctx, ds, level=it.level, schedule="pallas")(it)
+        _assert_ct_equal(out, single)
+
+
+def test_hemm_step2_stores_two_hoist_slots(setup):
+    """hemm Step-2 runs 2·l HLTs off exactly 2 unique hoisting products."""
+    s = setup
+    plan = s["plan"]
+    prog = compile_hemm(s["ctx"], plan)
+    step2 = prog._step2
+    assert step2.plan.batch == 2 * plan.l
+    # the executed batch reuses each hoisted Step-1 output l times -> 2 slots
+    ctA0, ctB0 = prog._step1([s["ctA"], s["ctB"]])
+    h1, h2 = hoist_batched(s["ctx"].eng, [ctA0, ctB0])
+    hoisted, ct_slots = step2._hoist_items([h1] * plan.l + [h2] * plan.l)
+    assert len(hoisted) == 2
+    assert ct_slots == [0] * plan.l + [1] * plan.l
+
+
+def test_hoist_batched_bit_exact_vs_loop(setup):
+    s = setup
+    eng = s["ctx"].eng
+    batched = hoist_batched(eng, [s["ctA"], s["ctB"], s["ctA"]])
+    for ct, hb in zip([s["ctA"], s["ctB"], s["ctA"]], batched):
+        hs = hoist(eng, ct)
+        np.testing.assert_array_equal(np.asarray(hb.digits),
+                                      np.asarray(hs.digits))
+        np.testing.assert_array_equal(np.asarray(hb.c0_ext),
+                                      np.asarray(hs.c0_ext))
+        np.testing.assert_array_equal(np.asarray(hb.c1_ext),
+                                      np.asarray(hs.c1_ext))
+        assert hb.level == hs.level and hb.scale == hs.scale
+
+
+# -- invalidation ---------------------------------------------------------
+
+
+def test_keygen_invalidates_and_gives_fresh_results():
+    rng = np.random.default_rng(11)
+    ctx = HEContext(CkksEngine(TOY))
+    m, l, n = 4, 3, 5
+    plan = plan_hemm(ctx.eng, m, l, n)
+    ctx.keygen(rng, rot_steps=plan.rot_steps)
+    A = np.random.default_rng(1).uniform(-1, 1, (m, l))
+    ct = encrypt_matrix(ctx.eng, ctx.keys, A, rng)
+    run = compile_hlt(ctx, plan.ds_sigma, level=ct.level)
+    run(ct)                                     # warm arena + pipelines
+    assert len(ctx.arena) > 0
+    old_keys = ctx.keys
+    ctx.keygen(np.random.default_rng(99), rot_steps=plan.rot_steps)
+    assert ctx.keys is not old_keys
+    assert len(ctx.arena) == 0 and not ctx._compiled and not ctx._jit
+    # the pre-keygen compiled object must refuse to run (stale operands)
+    with pytest.raises(RuntimeError, match="stale compiled object"):
+        run(ct)
+    # fresh compile under the new keys matches the mo oracle AND decrypts
+    ct2 = encrypt_matrix(ctx.eng, ctx.keys, A, np.random.default_rng(2))
+    run2 = compile_hlt(ctx, plan.ds_sigma, level=ct2.level)
+    assert run2 is not run
+    out = run2(ct2)
+    oracle = compile_hlt(ctx, plan.ds_sigma, level=ct2.level,
+                         schedule="mo")(ct2)
+    _assert_ct_equal(out, oracle)
+    from repro.core.hemm import u_sigma
+    got = ctx.eng.decrypt_decode(out, ctx.keys).real[:m * l]
+    np.testing.assert_allclose(got, u_sigma(m, l) @ A.flatten(order="F"),
+                               atol=1e-2)
+
+
+# -- deprecated shims -----------------------------------------------------
+
+
+def test_shims_warn_and_match_new_api(setup):
+    s = setup
+    ctx, plan = s["ctx"], s["plan"]
+    eng, keys = ctx.eng, ctx.keys
+    new = compile_hlt(ctx, plan.ds_sigma, level=s["ctA"].level,
+                      schedule="pallas")(s["ctA"])
+    with pytest.warns(DeprecationWarning, match="compile_hlt"):
+        old = hlt_mod.hlt(eng, s["ctA"], plan.ds_sigma, keys,
+                          schedule="pallas")
+    _assert_ct_equal(old, new)
+    with pytest.warns(DeprecationWarning, match="compile_hlt"):
+        old_b = hlt_mod.hlt_batched(
+            eng, [(s["ctA"], plan.ds_sigma), (s["ctB"], plan.ds_tau)], keys,
+            schedule="pallas")
+    newr = compile_hlt(ctx, [plan.ds_sigma, plan.ds_tau],
+                       level=s["ctA"].level, schedule="pallas")
+    for o, nw in zip(old_b, newr([s["ctA"], s["ctB"]])):
+        _assert_ct_equal(o, nw)
+    from repro.core import hemm as hemm_mod
+    prog = compile_hemm(ctx, plan, schedule="pallas")
+    with pytest.warns(DeprecationWarning, match="compile_hemm"):
+        old_mm = hemm_mod.hemm(eng, s["ctA"], s["ctB"], plan, keys,
+                               schedule="pallas")
+    _assert_ct_equal(old_mm, prog(s["ctA"], s["ctB"]))
+
+
+def test_shim_baseline_ignores_hoisted(setup):
+    """schedule='baseline' has no hoisting product; a supplied hoisted= must
+    be ignored (old dispatch behavior), not crash the baseline path."""
+    s = setup
+    ctx, plan = s["ctx"], s["plan"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        plain = hlt_mod.hlt(ctx.eng, s["ctA"], plan.ds_sigma, ctx.keys,
+                            schedule="baseline")
+        with_h = hlt_mod.hlt(ctx.eng, s["ctA"], plan.ds_sigma, ctx.keys,
+                             schedule="baseline",
+                             hoisted=hoist(ctx.eng, s["ctA"]))
+    _assert_ct_equal(plain, with_h)
+
+
+def test_legacy_context_pool_bounded():
+    from repro.core import compile as compile_mod
+    rng = np.random.default_rng(0)
+    for i in range(compile_mod._LEGACY_POOL_MAX + 3):
+        eng = CkksEngine(TOY)
+        keys = eng.keygen(rng)
+        legacy_context(eng, keys)
+    assert len(compile_mod._LEGACY_CONTEXTS) <= compile_mod._LEGACY_POOL_MAX
+
+
+def test_secure_engine_schedule_kwarg_warns():
+    from repro.secure import SecureMatmulEngine
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        eng = SecureMatmulEngine(TOY, tile=4, schedule="pallas")
+    assert eng.schedule == "pallas"
+    auto = SecureMatmulEngine(TOY, tile=4)      # no warning path
+    assert auto.schedule == "pallas"            # cost-model pick on TOY
+    assert auto.batched
+
+
+# -- engine identity regression (the id(eng) cache bug) -------------------
+
+
+def test_engine_drop_and_recreate_never_serves_stale_pipeline():
+    """The old module-level jit caches were keyed by id(engine); a GC'd
+    engine's id could be recycled by a new engine with DIFFERENT moduli and
+    silently serve a stale pipeline.  The context pool holds strong
+    references, so recycled ids cannot alias; every recreated engine must
+    produce oracle-exact results."""
+    params = [toy_params(logN=6, L=4, k=3, beta=2, scale_bits=26),
+              toy_params(logN=6, L=5, k=2, beta=3, scale_bits=26)]
+    m, l = 4, 3
+    for trial in range(4):
+        p = params[trial % 2]
+        rng = np.random.default_rng(100 + trial)
+        eng = CkksEngine(p)
+        plan = plan_hemm(eng, m, l, 5)
+        keys = eng.keygen(rng, rot_steps=plan.rot_steps)
+        A = rng.uniform(-1, 1, (m, l))
+        ct = encrypt_matrix(eng, keys, A, rng)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            got_mo = hlt_mod.hlt(eng, ct, plan.ds_sigma, keys, schedule="mo")
+            got_pl = hlt_mod.hlt(eng, ct, plan.ds_sigma, keys,
+                                 schedule="pallas")
+        oracle = hlt_mod._hlt_hoisted(eng, hoist(eng, ct), plan.ds_sigma,
+                                      keys)
+        _assert_ct_equal(got_mo, oracle)
+        _assert_ct_equal(got_pl, oracle)
+        # pooled contexts pin engines: same (eng, keys) -> same context,
+        # distinct engines -> distinct contexts even if Python recycles ids
+        assert legacy_context(eng, keys) is legacy_context(eng, keys)
+        del eng, keys, ct, plan                 # drop our refs; pool keeps its
