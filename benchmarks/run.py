@@ -11,19 +11,31 @@ quantity: counts, MB, speedups, ...). Sections:
              paper's FPGA speedups
   blockmm  — batched block MM (slot-indexed fused pipelines over all
              ciphertext tiles) vs the sequential tile loop
+  dist     — schedule="sharded" (limb-sharded shard_map MO-HLT) across
+             forced host-device counts (subprocesses set XLA_FLAGS):
+             per-device-count wall times + measured-vs-predicted collective
+             bytes
   kernels  — Pallas kernel calls (interpret mode) vs jnp oracle
   roofline — §Roofline table from results/dryrun/*.json (if present)
 
 Flags:
-  --json [PATH]  also write machine-readable results (per-schedule wall
-                 times, operand bytes before/after slot dedup) to PATH
-                 (default BENCH_hemm.json)
-  --smoke        minimal reps — CI smoke mode
+  --json [PATH]  also write machine-readable results: hemm/fig6 data to PATH
+                 (default BENCH_hemm.json) plus one sibling file per extra
+                 section (BENCH_blockmm.json, BENCH_dist.json) so CI can
+                 track each perf trajectory separately
+  --smoke        minimal reps / sizes — CI smoke mode
+
+Timing is min-over-reps (after a warmup/compile call): jax's eager dispatch
+cache thrashes between interleaved pipelines, so a mean over reps is noisy
+while the min is stable (see memory: FAME repo perf facts).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -31,14 +43,21 @@ import numpy as np
 # --json collector: section -> {key: value}; filled by the bench functions.
 RESULTS: dict = {}
 
+# sections that get their own BENCH_<name>.json next to the --json path
+SPLIT_SECTIONS = ("blockmm", "dist")
+
 
 def _t(fn, *args, reps=3, **kw):
-    fn(*args, **kw)                    # warmup / compile
-    t0 = time.perf_counter()
+    """min-over-reps wall time in µs (each rep blocked to completion)."""
+    _block(fn(*args, **kw))            # warmup / compile (block: async tail
+    best = float("inf")                # must not leak into the first rep)
+    out = None
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args, **kw)
-    _block(out)
-    return (time.perf_counter() - t0) / reps * 1e6, out
+        _block(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
 
 
 def _block(x):
@@ -205,6 +224,93 @@ def bench_blockmm(smoke: bool = False):
     }
 
 
+# child script for bench_dist: XLA_FLAGS must be set BEFORE jax initializes,
+# so every device count runs in a fresh subprocess.  Prepended with
+# "DEV=..; LOGN=..; REPS=..; BATCH=.." by the parent.
+_DIST_CHILD = """
+import json, time
+import numpy as np
+import repro
+import jax
+from repro.core.ckks import CkksEngine
+from repro.core.compile import HEContext, compile_hlt
+from repro.core.hemm import plan_hemm, encrypt_matrix
+from repro.core.params import toy_params
+from repro.launch.mesh import make_mesh_for
+from repro.distributed.hlo_analysis import collective_stats
+
+params = toy_params(logN=LOGN, L=4, k=3, beta=2)
+mesh = make_mesh_for(DEV, model_parallel=DEV) if DEV > 1 else None
+ctx = HEContext(CkksEngine(params), mesh=mesh)
+rng = np.random.default_rng(0)
+plan = plan_hemm(ctx.eng, 4, 3, 5)
+ctx.keygen(rng, rot_steps=plan.rot_steps)
+cts = [encrypt_matrix(ctx.eng, ctx.keys, rng.uniform(-1, 1, (4, 3)), rng)
+       for _ in range(BATCH)]
+
+
+def timed(fn):
+    out = fn()                               # warmup / compile
+    jax.block_until_ready([c.c0 for c in out])
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready([c.c0 for c in out])
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+run = compile_hlt(ctx, [plan.ds_sigma] * BATCH, level=cts[0].level,
+                  schedule="sharded")
+st = collective_stats(run.sharded_hlo(cts))
+res = dict(devices=DEV, n_model=ctx.n_model, n_ct=ctx.n_ct,
+           sharded_us=round(timed(lambda: run(cts)), 1),
+           predicted_collective_bytes=run.plan.collective_bytes,
+           measured_collective_bytes=st.total_bytes,
+           collective_count=st.count)
+if DEV == 1:
+    mo = compile_hlt(ctx, [plan.ds_sigma] * BATCH, level=cts[0].level,
+                     schedule="mo")
+    res["mo_us"] = round(timed(lambda: mo(cts)), 1)
+print(json.dumps(res))
+"""
+
+
+def bench_dist(smoke: bool = False):
+    """schedule="sharded" (limb-sharded shard_map MO-HLT, core/hlt_dist.py)
+    across forced host-device counts: per-count wall time of one batched HLT
+    plus the plan's PREDICTED collective bytes vs the bytes MEASURED in the
+    compiled HLO (distributed/hlo_analysis.collective_stats).  Measured
+    counts full all-reduce operand traffic; predicted is the ring-adjusted
+    per-device estimate — same order, different convention."""
+    counts = (1, 4) if smoke else (1, 2, 4)
+    reps = 1 if smoke else 3
+    batch = 4
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    per_count = {}
+    for dev in counts:
+        code = (f"DEV={dev}; LOGN=6; REPS={reps}; BATCH={batch}\n"
+                + _DIST_CHILD)
+        env = dict(os.environ, JAX_PLATFORMS="cpu",
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={dev}")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=1800)
+        assert r.returncode == 0, r.stderr[-3000:]
+        res = json.loads(r.stdout.strip().splitlines()[-1])
+        per_count[str(dev)] = res
+        row(f"dist/devices={dev}/sharded_hlt", res["sharded_us"],
+            f"coll_pred_B={res['predicted_collective_bytes']};"
+            f"coll_meas_B={res['measured_collective_bytes']};"
+            f"n_model={res['n_model']}")
+        if "mo_us" in res:
+            row(f"dist/devices={dev}/mo_hlt", res["mo_us"],
+                "single-device reference")
+    RESULTS["dist"] = {"batch": batch, "logN": 6, "per_device_count":
+                       per_count}
+
+
 def bench_kernels():
     import jax.numpy as jnp
     from repro.core.params import toy_params, get_context
@@ -260,7 +366,7 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = [bench_table1, bench_table2_costmodel, bench_fig6_schedules,
-                bench_blockmm, bench_kernels, bench_roofline]
+                bench_blockmm, bench_dist, bench_kernels, bench_roofline]
     for fn in sections:
         if args.section and args.section not in fn.__name__:
             continue
@@ -269,9 +375,17 @@ def main() -> None:
         else:
             fn()
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(RESULTS, f, indent=2, sort_keys=True)
-        print(f"# wrote {args.json}", flush=True)
+        split = {s: RESULTS.pop(s) for s in SPLIT_SECTIONS if s in RESULTS}
+        if RESULTS:
+            with open(args.json, "w") as f:
+                json.dump(RESULTS, f, indent=2, sort_keys=True)
+            print(f"# wrote {args.json}", flush=True)
+        base = os.path.dirname(os.path.abspath(args.json))
+        for s, data in split.items():
+            path = os.path.join(base, f"BENCH_{s}.json")
+            with open(path, "w") as f:
+                json.dump(data, f, indent=2, sort_keys=True)
+            print(f"# wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -38,11 +38,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import hlt as hlt_mod
+from repro.core import hlt as hlt_mod, hlt_dist
 from repro.core.ckks import Ciphertext, CkksEngine, Keys
-from repro.core.costmodel import (hlt_stage_costs, pick_rotation_chunk,
-                                  select_schedule)
+from repro.core.costmodel import (VMEM_HEADROOM, hlt_stage_costs,
+                                  pick_rotation_chunk, select_schedule,
+                                  sharded_collective_bytes)
 from repro.core.hlt import DiagSet, Hoisted, hoist, hoist_batched
+from repro.distributed.sharding import logical_axis_size, make_rules
 
 
 # ---------------------------------------------------------------------------
@@ -123,18 +125,34 @@ class HEContext:
     Montgomery operands derived from the old keys.
     """
 
-    def __init__(self, eng: CkksEngine, keys: Optional[Keys] = None):
+    def __init__(self, eng: CkksEngine, keys: Optional[Keys] = None,
+                 mesh=None, vmem_headroom: Optional[float] = None):
         self.eng = eng
         self.keys = keys
         self.arena = OperandArena()
         self._jit: dict = {}            # pipeline cache (key -> jitted fn)
         self._compiled: dict = {}       # compile memo (key -> program)
         self._generation = 0            # bumped by invalidate()
+        # distributed execution: a (pod, data, model) mesh makes the
+        # schedule="sharded" SPMD program available — limbs shard over
+        # `model`, the ciphertext/tile batch over `pod`×`data`
+        # (distributed/sharding.py rules); the cost model sees the axis
+        # sizes and may pick "sharded" on its own.
+        self.mesh = mesh
+        self.rules = make_rules(mesh)
+        self.n_model = logical_axis_size(self.rules, "limbs")
+        self.n_ct = logical_axis_size(self.rules, "ct_batch")
+        self.n_devices = self.n_model * self.n_ct
+        # VMEM budget fraction for the fused-kernel working set (the named
+        # knob replacing the old hard-coded 0.75 guess; threaded into plans)
+        self.vmem_headroom = (VMEM_HEADROOM if vmem_headroom is None
+                              else float(vmem_headroom))
 
     @classmethod
     def create(cls, params, rng: np.random.Generator,
-               rot_steps: Sequence[int] = ()) -> "HEContext":
-        ctx = cls(CkksEngine(params))
+               rot_steps: Sequence[int] = (), mesh=None,
+               vmem_headroom: Optional[float] = None) -> "HEContext":
+        ctx = cls(CkksEngine(params), mesh=mesh, vmem_headroom=vmem_headroom)
         ctx.keygen(rng, rot_steps=rot_steps)
         return ctx
 
@@ -194,6 +212,21 @@ class HEContext:
         self._jit[key] = fn
         return fn
 
+    def _sharded_pipeline(self, tabs, d_pad: int, nbeta: int):
+        """Jitted shard_map SPMD MO-HLT (core/hlt_dist.py) for one compile
+        point; batch/slot-count changes retrace automatically (arg shapes).
+        The f64 BaseConv correction keeps CPU runs bit-exact vs the MO
+        oracle; TPU runs use the native f32 path."""
+        key = ("sharded", tabs.level, tabs.n_model, d_pad, nbeta)
+        fn = self._jit.get(key)
+        if fn is not None:
+            return fn
+        fp = jnp.float64 if jax.default_backend() == "cpu" else jnp.float32
+        fn = jax.jit(hlt_dist.make_sharded_hlt_fn(
+            tabs, self.rules, d_pad=d_pad, nbeta=nbeta, fp_dtype=fp))
+        self._jit[key] = fn
+        return fn
+
 
 # Context pool for the DEPRECATED string-threaded shims (hlt(), hemm(), ...):
 # one context per (engine, keys) pair, keyed by strong identity so a live
@@ -237,6 +270,10 @@ class HLTPlan:
     operand_bytes: int                  # deduped key/diag operand bytes
     operand_bytes_naive: int            # what B-fold stacking would allocate
     stage_costs: dict                   # per-stage byte/rotation counts
+    collective_bytes: int = 0           # predicted cross-device bytes / exec
+    n_model: int = 1                    # limb-sharding ways (mesh `model`)
+    n_ct: int = 1                       # ct-batch-sharding ways (pod×data)
+    vmem_headroom: float = VMEM_HEADROOM  # VMEM fraction the chunk pick used
 
     @property
     def dedup_factor(self) -> float:
@@ -274,8 +311,13 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
         batch = len(diag_list)
         assert batch > 0, "batched compile needs at least one DiagSet"
     nbeta = len(eng.tools.digit_bases(level))
+    d_list = tuple(ds.d for ds in diag_list)
+    d_max = max(d_list)
     if schedule is None:
-        schedule = select_schedule(eng.params, nbeta=nbeta)
+        schedule = select_schedule(
+            eng.params, nbeta=nbeta, headroom=ctx.vmem_headroom,
+            n_model=ctx.n_model, n_ct=ctx.n_ct, d=d_max,
+            ctb=batch if batch is not None else 1)
     assert schedule in hlt_mod.SCHEDULES, schedule
 
     memo_key = ("hlt", schedule, level, batch, rotation_chunk,
@@ -284,10 +326,9 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
     if hit is not None:
         return hit
 
-    d_list = tuple(ds.d for ds in diag_list)
-    d_max = max(d_list)
     if rotation_chunk is None and schedule == "pallas":
-        chunk = max(1, min(pick_rotation_chunk(eng.params, nbeta=nbeta), d_max))
+        chunk = max(1, min(pick_rotation_chunk(
+            eng.params, nbeta=nbeta, headroom=ctx.vmem_headroom), d_max))
     elif rotation_chunk is None:
         chunk = d_max
     else:
@@ -306,13 +347,36 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
         slots.append(local[k])
 
     operands = None
-    if schedule == "pallas":
+    sharded_tabs = None
+    if schedule in ("pallas", "sharded"):
         per = [ctx.arena.slot(
                    "pallas_operands", ds, (level, nbeta, d_pad),
                    lambda ds=ds: hlt_mod._build_pallas_operands(
                        eng, ds, ctx.keys, level, nbeta, d_pad))[1]
                for ds in uniq]
-        if batch is None:
+        if schedule == "sharded":
+            # one stacked-and-limb-padded operand set per UNIQUE DiagSet;
+            # the SPMD program gathers by slot (same dedup as the fused
+            # kernel).  DistTables-style constants live in the arena, keyed
+            # like every other operand and dropped by ctx.invalidate().
+            def _build_tabs():
+                t = hlt_dist.build_shard_tables(eng.params, level,
+                                                ctx.n_model)
+                return (t, hlt_dist.shard_operand_arrays(t))
+            _, sharded_tabs = ctx.arena.slot(
+                "sharded_tables", eng, (level, ctx.n_model), _build_tabs)
+            m_pad = sharded_tabs[0].M_pad
+            stacked = [jnp.stack([p[i] for p in per]) for i in range(5)]
+            pad = m_pad - stacked[0].shape[2]
+            if pad:
+                u, rk0, rk1 = stacked[:3]
+                stacked[0] = jnp.pad(u, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                stacked[1] = jnp.pad(rk0, ((0, 0), (0, 0), (0, 0), (0, pad),
+                                           (0, 0)))
+                stacked[2] = jnp.pad(rk1, ((0, 0), (0, 0), (0, 0), (0, pad),
+                                           (0, 0)))
+            operands = tuple(stacked)
+        elif batch is None:
             operands = per[0]
         else:
             operands = tuple(jnp.stack([p[i] for p in per]) for i in range(5))
@@ -320,6 +384,7 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
     op_bytes = _operand_nbytes(operands) if operands is not None else 0
     naive = (op_bytes if batch is None else
              op_bytes // max(1, len(uniq)) * len(diag_list))
+    ctb = batch if batch is not None else 1
     plan = HLTPlan(
         schedule=schedule, level=level, batch=batch, nbeta=nbeta, chunk=chunk,
         d=d_list, d_pad=d_pad, diag_slots=tuple(slots),
@@ -327,8 +392,18 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
         operand_bytes=op_bytes, operand_bytes_naive=naive,
         stage_costs=hlt_stage_costs(
             eng.params, d=d_max, d_pad=d_pad, nbeta=nbeta, chunk=chunk,
-            n_limbs_ext=len(eng.tools.digit_bases(level)[0][2])))
-    run = CompiledHLT(ctx, plan, tuple(diag_list), tuple(uniq), operands)
+            n_limbs_ext=len(eng.tools.digit_bases(level)[0][2]),
+            n_model=ctx.n_model if schedule == "sharded" else 1, ctb=ctb),
+        collective_bytes=(sharded_collective_bytes(
+            # the psum moves the zero-ct PADDED batch, not the logical one
+            eng.params, n_model=ctx.n_model,
+            ctb=-(-ctb // max(1, ctx.n_ct)) * max(1, ctx.n_ct))
+            if schedule == "sharded" else 0),
+        n_model=ctx.n_model if schedule == "sharded" else 1,
+        n_ct=ctx.n_ct if schedule == "sharded" else 1,
+        vmem_headroom=ctx.vmem_headroom)
+    run = CompiledHLT(ctx, plan, tuple(diag_list), tuple(uniq), operands,
+                      sharded_tabs=sharded_tabs)
     ctx._compiled[memo_key] = run
     return run
 
@@ -342,14 +417,20 @@ class CompiledHLT:
     """
 
     def __init__(self, ctx: HEContext, plan: HLTPlan, diag_list, uniq_diags,
-                 operands):
+                 operands, sharded_tabs=None):
         self.ctx = ctx
         self.plan = plan
         self._diags = diag_list         # strong refs, one per batch element
         self._uniq = uniq_diags
         self._operands = operands       # single tuple | stacked tuple | None
+        self._sharded = sharded_tabs    # (ShardTables, table arrays) | None
         self._diag_slots = (None if plan.batch is None else
                             jnp.asarray(np.array(plan.diag_slots, np.int32)))
+        if sharded_tabs is not None:    # slots padded to the ct-axis multiple
+            B = plan.batch or 1
+            b_pad = -(-B // max(1, ctx.n_ct)) * max(1, ctx.n_ct)
+            padded = list(plan.diag_slots)[:B] + [0] * (b_pad - B)
+            self._sharded_slots = jnp.asarray(np.array(padded, np.int32))
         self._gen = ctx._generation
 
     # -- helpers -------------------------------------------------------------
@@ -383,6 +464,12 @@ class CompiledHLT:
 
     def __call__(self, items):
         self.ctx._check_generation(self._gen)
+        if self.plan.schedule == "sharded":
+            if self.plan.batch is None:
+                return self._run_sharded([items])[0]
+            items = list(items)
+            assert len(items) == self.plan.batch, (len(items), self.plan.batch)
+            return self._run_sharded(items)
         if self.plan.batch is None:
             return self._run_single(items, self._diags[0], self._operands)
         items = list(items)
@@ -415,6 +502,54 @@ class CompiledHLT:
         fn = ctx._pallas_pipeline(plan.level, plan.chunk, "single")
         c0, c1 = fn(hst.digits, hst.c0_ext, hst.c1_ext, *operands)
         return self._finish(c0, c1, hst.scale, ds)
+
+    def _sharded_args(self, items) -> dict:
+        """Pack the shard_map argument dict: stack the ciphertext batch, pad
+        it to a ct-axis multiple with zero ciphertexts (they flow zeros and
+        are dropped again), zero-extend the limb axis to the padded shard."""
+        plan = self.plan
+        tabs, tab_arrays = self._sharded
+        for it in items:
+            assert isinstance(it, Ciphertext), \
+                "schedule='sharded' hoists inside the SPMD program; pass " \
+                "Ciphertexts, not hoisting products"
+            assert it.level == plan.level, (it.level, plan.level)
+        B = len(items)
+        b_pad = self._sharded_slots.shape[0]
+        c0 = jnp.stack([it.c0 for it in items])
+        c1 = jnp.stack([it.c1 for it in items])
+        if b_pad > B:
+            z = jnp.zeros((b_pad - B,) + c0.shape[1:], jnp.uint32)
+            c0 = jnp.concatenate([c0, z])
+            c1 = jnp.concatenate([c1, z])
+        rows_pad = tabs.M_pad - (plan.level + 1)
+        ext = ((0, 0), (0, rows_pad), (0, 0))
+        u, rk0, rk1, perms, is_id = self._operands
+        return dict(
+            c0f=jnp.pad(c0, ext), c1f=jnp.pad(c1, ext), c1rep=c1,
+            slots=self._sharded_slots,
+            u=u, rk0=rk0, rk1=rk1, perms=perms, is_id=is_id, tab=tab_arrays)
+
+    def _run_sharded(self, items) -> list:
+        ctx, plan = self.ctx, self.plan
+        tabs, _ = self._sharded
+        args = self._sharded_args(items)
+        fn = ctx._sharded_pipeline(tabs, plan.d_pad, plan.nbeta)
+        out0, out1 = fn(args)
+        lvl = plan.level
+        return [self._finish(out0[b, :lvl], out1[b, :lvl], it.scale, ds)
+                for b, (it, ds) in enumerate(zip(items, self._diags))]
+
+    def sharded_hlo(self, items) -> str:
+        """Optimized HLO text of the sharded SPMD program for this batch —
+        benchmarks feed it to distributed/hlo_analysis.collective_stats to
+        MEASURE collective bytes against the plan's prediction."""
+        assert self.plan.schedule == "sharded", self.plan.schedule
+        self.ctx._check_generation(self._gen)
+        tabs, _ = self._sharded
+        fn = self.ctx._sharded_pipeline(tabs, self.plan.d_pad,
+                                        self.plan.nbeta)
+        return fn.lower(self._sharded_args(items)).compile().as_text()
 
     def _run_batched_pallas(self, items) -> list:
         ctx, plan = self.ctx, self.plan
@@ -460,6 +595,13 @@ class HEMMPlan:
     def operand_bytes_naive(self) -> int:
         return self.step1.operand_bytes_naive + self.step2.operand_bytes_naive
 
+    @property
+    def collective_bytes(self) -> int:
+        """Predicted cross-device bytes per execution (0 off-mesh): the two
+        HLT stages' merged-ModDown BaseConv psums — the program's only
+        collectives."""
+        return self.step1.collective_bytes + self.step2.collective_bytes
+
 
 class HEMMProgram:
     """A compiled Algorithm-2 HE MM: ``prog(ctA, ctB) -> ctC``.
@@ -485,12 +627,17 @@ class HEMMProgram:
         assert ctA.level == ctB.level == self.plan.level
         if self.plan.batched:
             ctA0, ctB0 = self._step1([ctA, ctB])
-            hstA, hstB = hoist_batched(eng, [ctA0, ctB0])
-            outs = self._step2([hstA] * p.l + [hstB] * p.l)
+            if self.plan.schedule == "sharded":
+                # the SPMD program hoists internally (limb-local, off the
+                # replicated inputs) — feed the Step-1 ciphertexts directly
+                outs = self._step2([ctA0] * p.l + [ctB0] * p.l)
+            else:
+                hstA, hstB = hoist_batched(eng, [ctA0, ctB0])
+                outs = self._step2([hstA] * p.l + [hstB] * p.l)
         else:
             s1a, s1b = self._step1
             ctA0, ctB0 = s1a(ctA), s1b(ctB)
-            if self.plan.schedule == "baseline":
+            if self.plan.schedule in ("baseline", "sharded"):
                 inA, inB = ctA0, ctB0
             else:   # hoist once, reuse across all l Step-2 HLTs per input
                 inA, inB = hoist(eng, ctA0), hoist(eng, ctB0)
@@ -516,9 +663,12 @@ def compile_hemm(ctx: HEContext, plan, *, level: Optional[int] = None,
     level = eng.params.L if level is None else level
     nbeta = len(eng.tools.digit_bases(level))
     if schedule is None:
-        schedule = select_schedule(eng.params, nbeta=nbeta)
+        schedule = select_schedule(
+            eng.params, nbeta=nbeta, headroom=ctx.vmem_headroom,
+            n_model=ctx.n_model, n_ct=ctx.n_ct,
+            d=plan.ds_sigma.d, ctb=2 * plan.l)
     if batched is None:
-        batched = schedule == "pallas"
+        batched = schedule in ("pallas", "sharded")
     batched = batched and schedule != "baseline"
     memo_key = ("hemm", _StrongKey(plan), schedule, level, rotation_chunk,
                 batched)

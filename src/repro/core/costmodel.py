@@ -6,7 +6,8 @@ Two word models:
    words); reproduces the §III-B3 numbers (0.43/3.6 MB Set-A, 6.7/61 MB Set-B,
    27/255 MB Set-C, Eq. 24 ≈ 29 MB).
  * ``tpu``    — 4-byte u32 words with ~2× the limb count for equal log Q
-   (DESIGN.md §3); drives VMEM BlockSpec sizing and the roofline memory term.
+   (core/params.py word-size adaptation); drives VMEM BlockSpec sizing and
+   the roofline memory term.
 """
 from __future__ import annotations
 
@@ -20,10 +21,28 @@ MB = float(1 << 20)
 # Per-core TPU VMEM (the FPGA scratchpad analogue; pallas guide: ~16 MB/core).
 VMEM_BYTES = 16.0 * MB
 
+# Fraction of per-core VMEM the fused-HLT working set may claim.  A NAMED
+# budget knob (was a hard-coded 0.75 guess buried in two signatures): it is
+# the default of ``HEContext(vmem_headroom=...)`` and is threaded into every
+# HLTPlan, so tests/benchmarks can pin chunk choices (e.g. rotation_chunk=2)
+# explicitly and see which headroom produced a plan.  Replace with a
+# VMEM-measured value once the kernels run with interpret=False on hardware
+# (ROADMAP).
+VMEM_HEADROOM = 0.75
+
+# Collective bytes are more expensive than local HBM bytes by roughly the
+# HBM:ICI bandwidth ratio (~8x on current TPU generations); the schedule
+# selector charges the sharded schedule's BaseConv collective this factor.
+ICI_PENALTY = 8.0
+
+# Representative per-HLT diagonal count when the caller doesn't know d yet
+# (σ of a 16×16 single-ciphertext MM tile: 2·16−1).
+_DEFAULT_D = 31
+
 
 def pick_rotation_chunk(params: "HEParams", nbeta: int | None = None,
                         vmem_bytes: float = VMEM_BYTES,
-                        headroom: float = 0.75) -> int:
+                        headroom: float | None = None) -> int:
     """Largest rotation chunk whose fused-HLT per-grid-step working set
     (kernels/fused_hlt.py docstring) fits the per-core VMEM budget.
 
@@ -33,6 +52,7 @@ def pick_rotation_chunk(params: "HEParams", nbeta: int | None = None,
     Each row is N u32 coefficients (4 bytes).
     """
     nbeta = params.beta if nbeta is None else nbeta
+    headroom = VMEM_HEADROOM if headroom is None else headroom
     row = 4.0 * params.N
     budget_rows = headroom * vmem_bytes / row
     resident = nbeta + 4
@@ -40,49 +60,108 @@ def pick_rotation_chunk(params: "HEParams", nbeta: int | None = None,
     return max(1, int((budget_rows - resident) // per_rotation))
 
 
+def sharded_collective_bytes(params: "HEParams", *, n_model: int = 1,
+                             ctb: int = 1) -> int:
+    """Predicted per-execution collective traffic of schedule="sharded".
+
+    The merged ModDown+Rescale BaseConv is the program's ONLY collective
+    (core/hlt_dist.py): a psum of the (k+1) dropped limb rows for both output
+    polys of every ciphertext in the batch.  A ring all-reduce moves
+    ~2·(n−1)/n of the payload per device.
+    """
+    if n_model <= 1:
+        return 0
+    payload = 2 * (params.k + 1) * params.N * 4 * max(1, ctb)
+    return int(2 * (n_model - 1) / n_model * payload)
+
+
+def hlt_operand_bytes(params: "HEParams", *, d: int,
+                      nbeta: int | None = None,
+                      n_limbs_ext: int | None = None) -> float:
+    """Rotation-loop operand footprint of one HLT (keys + diagonals): the
+    traffic limb-sharding divides across the ``model`` axis."""
+    nbeta = params.beta if nbeta is None else nbeta
+    m = (params.L + 1 + params.k) if n_limbs_ext is None else n_limbs_ext
+    return d * (2 * nbeta + 1) * m * 4.0 * params.N
+
+
 def select_schedule(params: "HEParams", nbeta: int | None = None,
                     vmem_bytes: float = VMEM_BYTES,
-                    headroom: float = 0.75) -> str:
+                    headroom: float | None = None, *,
+                    n_model: int = 1, n_ct: int = 1,
+                    d: int | None = None, ctb: int | None = None) -> str:
     """Cost-model schedule pick for compile_hlt/compile_hemm (schedule=None).
 
-    The fused Pallas datapath needs its minimal per-grid-step working set —
-    the chunk=1 residency of pick_rotation_chunk's formula: β digit rows,
-    c0e/c1e, two accumulator rows, plus one rotation's operands (2β key rows,
-    a diagonal row and a perm row) — to fit the per-core VMEM budget.  When it
-    does (every shipped parameter set), the fused kernel is the schedule; when
-    a hypothetical parameter set overflows even chunk=1, fall back to the u64
-    limb-outer reference ("mo"), which streams per-row and has no residency
-    requirement.
+    Single device — the fused Pallas datapath needs its minimal per-grid-step
+    working set (the chunk=1 residency of pick_rotation_chunk's formula: β
+    digit rows, c0e/c1e, two accumulator rows, plus one rotation's operands)
+    to fit the per-core VMEM budget.  When it does (every shipped parameter
+    set), the fused kernel is the schedule; when a hypothetical parameter set
+    overflows even chunk=1, fall back to the u64 limb-outer reference ("mo").
+
+    Multi-device mesh (``n_model``-way limb sharding × ``n_ct``-way
+    ciphertext-batch sharding, from HEContext's mesh) — compare PER-DEVICE
+    traffic: the single-device schedule streams every rotation-loop operand
+    byte for every batch element through one device; the sharded SPMD
+    program splits them over the whole mesh (batch padded up to the ct axis)
+    but pays its BaseConv psum charged at the HBM:ICI bandwidth ratio
+    (``ICI_PENALTY``).  Large N / many limbs / big d / batches that span the
+    ct axis flip to "sharded"; one device — or work too small to amortize
+    the collective — keeps the single-device pick.
     """
     nbeta = params.beta if nbeta is None else nbeta
+    headroom = VMEM_HEADROOM if headroom is None else headroom
     row = 4.0 * params.N
     min_working_set = (nbeta + 4 + 2 * nbeta + 2) * row
-    if min_working_set <= headroom * vmem_bytes:
-        return "pallas"
-    return "mo"
+    single = "pallas" if min_working_set <= headroom * vmem_bytes else "mo"
+    n_model, n_ct = max(1, n_model), max(1, n_ct)
+    if n_model * n_ct <= 1:
+        return single
+    d_eff = _DEFAULT_D if d is None else d
+    ctb_eff = max(1, ctb or 1)
+    b_pad = -(-ctb_eff // n_ct) * n_ct          # zero-ct padded batch
+    operand = hlt_operand_bytes(params, d=d_eff, nbeta=nbeta)
+    single_dev = operand * ctb_eff
+    shard_dev = (operand * b_pad / (n_model * n_ct)
+                 + ICI_PENALTY * sharded_collective_bytes(
+                     params, n_model=n_model, ctb=b_pad // n_ct))
+    return "sharded" if shard_dev < single_dev else single
 
 
 def hlt_stage_costs(params: "HEParams", *, d: int, d_pad: int, nbeta: int,
-                    chunk: int, n_limbs_ext: int) -> dict:
-    """Per-stage byte / rotation counts of ONE fused-schedule HLT at a given
+                    chunk: int, n_limbs_ext: int, n_model: int = 1,
+                    ctb: int = 1) -> dict:
+    """Per-stage byte / rotation / collective counts of ONE HLT at a given
     compile point (u32 word model) — attached to HLTPlan for inspection.
 
-    bytes = operand traffic the stage streams through VMEM per ciphertext;
-    rotations = real (non-padding) rotations the stage performs.
+    bytes = operand traffic the stage streams through VMEM per ciphertext
+    (per DEVICE when the limb axis is n_model-way sharded); rotations = real
+    (non-padding) rotations; collective_bytes = predicted cross-device
+    traffic (only the merged ModDown+Rescale BaseConv moves data between
+    ranks — ModUp reads the limb-replicated inputs, everything else is
+    limb-local).
     """
     row = 4 * params.N
     m = n_limbs_ext
+    nm = max(1, n_model)
+    m_loc = -(-m // nm)                  # per-device rows (padded shard)
+    coll = sharded_collective_bytes(params, n_model=nm, ctb=ctb)
     return {
         "hoist": {                       # Decomp/ModUp digits + raised c0/c1
-            "bytes": (nbeta + 2) * m * row, "rotations": 0},
+            "bytes": (nbeta + 2) * m_loc * row, "rotations": 0,
+            "collective_bytes": 0},
         "automorph": {                   # per-rotation perm-table gather
-            "bytes": d_pad * (1 + nbeta) * m * row, "rotations": d},
+            "bytes": d_pad * (1 + nbeta) * m_loc * row, "rotations": d,
+            "collective_bytes": 0},
         "keyip": {                       # 2β rot-key rows per rotation
-            "bytes": 2 * nbeta * d_pad * m * row, "rotations": d},
+            "bytes": 2 * nbeta * d_pad * m_loc * row, "rotations": d,
+            "collective_bytes": 0},
         "diagip": {                      # one diagonal row per rotation
-            "bytes": d_pad * m * row, "rotations": d},
+            "bytes": d_pad * m_loc * row, "rotations": d,
+            "collective_bytes": 0},
         "moddown": {                     # merged ModDown+Rescale in/out
-            "bytes": 2 * m * row, "rotations": 0},
+            "bytes": 2 * m_loc * row, "rotations": 0,
+            "collective_bytes": coll},
         "chunk": chunk,
     }
 

@@ -226,7 +226,10 @@ def _perm_table(eng: CkksEngine, zs) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-SCHEDULES = ("baseline", "hoisted", "mo", "pallas")
+# "sharded" is the multi-device shard_map schedule (core/hlt_dist.py): limbs
+# over the mesh `model` axis, the ciphertext batch over `pod`×`data`; same
+# math, bit-exact vs "mo" (tests/test_sharded.py).
+SCHEDULES = ("baseline", "hoisted", "mo", "pallas", "sharded")
 
 _DEPRECATION = ("%s is deprecated: build an HEContext and use "
                 "repro.core.compile.compile_hlt / compile_hemm (the "

@@ -1,6 +1,7 @@
 """Distributed MO-HLT: the paper's datapath as one SPMD program.
 
-Mapping (DESIGN.md §3): RNS limbs shard over the `model` mesh axis (limbs are
+Mapping (distributed/sharding.py rules: ``limbs -> model``, ``ct_batch ->
+pod x data``): RNS limbs shard over the `model` mesh axis (limbs are
 independent through NTT/Automorph/KeyIP/DiagIP — the fused stages), ciphertext
 batch shards over `pod`×`data`. BaseConv (ModUp/ModDown) is the only
 limb-coupling stage → the only collective, exactly the paper's "only unfused
@@ -10,11 +11,31 @@ Arithmetic is the TPU-native u32 Montgomery path end to end (no u64), so the
 lowered HLO is what a real v5e deployment would run. The float correction in
 BaseConv is f32 on this path (f64 on the CPU oracle path) — configurable, and
 the CPU test uses f64 to check bit-exactness against core/hlt.py's MO schedule.
+
+Two entry points:
+
+* ``build_tables`` + ``make_mo_hlt_fn`` — the original GSPMD prototype (one
+  DiagSet applied to a ciphertext batch, sharding via constraint annotations).
+  Kept for the roofline dry-run (launch/dryrun.py) and the slow SPMD test.
+
+* ``build_shard_tables`` + ``make_sharded_hlt_fn`` — the production
+  ``schedule="sharded"`` program behind ``compile_hlt``/``compile_hemm``
+  (core/compile.py): an explicit ``shard_map`` SPMD program with per-element
+  diagonal-set slots (the same deduped operand layout as the fused Pallas
+  schedule), ciphertext batch sharded over ``pod``×``data`` and the extended
+  limb axis sharded over ``model`` (padded when the device count does not
+  divide it). ModUp runs collective-free off the replicated inputs; the merged
+  ModDown+Rescale BaseConv is the ONLY collective — an exact ``psum`` with a
+  single contributor per limb row, so the program stays bit-exact against the
+  single-device MO schedule.
+
+This module owns NO table/cache state: every builder here is pure, and the
+compiled path stores its tables in the owning ``HEContext`` operand arena
+(generation-guarded, dropped on re-keygen) like every other operand.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import numpy as np
@@ -49,9 +70,8 @@ class DistTables:
     ctb: int
 
 
-def _mont(x: np.ndarray, qs: np.ndarray) -> np.ndarray:
-    return ((x.astype(np.uint64) << np.uint64(32)) % qs.astype(np.uint64)
-            ).astype(np.uint32)
+# host Montgomery encoding: the shared modmath helper (was a local copy)
+_mont = mm.to_mont_host_arr
 
 
 def build_tables(params: HEParams, d: int, ctb: int) -> DistTables:
@@ -271,6 +291,334 @@ def make_mo_hlt_fn(tabs: DistTables, rules=None, fp_dtype=jnp.float32,
         return mod_down(acc0), mod_down(acc1)
 
     return fn
+
+
+# ---------------------------------------------------------------------------
+# schedule="sharded": the shard_map SPMD program behind the compile API
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardTables:
+    """Constant tables for the shard_map'd limb-sharded MO-HLT at one
+    (params, level, n_model) compile point.
+
+    The extended limb axis (the ``full`` basis, M rows) is padded to
+    ``M_pad = rows_loc * n_model`` so the ``model`` mesh axis always divides
+    it (the non-divisible-device-count path). Padding rows carry valid moduli
+    (copies of the last real row) and all-zero operands, so every stage maps
+    them zero -> zero. PURE data — ownership lives in the HEContext operand
+    arena (core/compile.py), never in module state.
+    """
+    params: HEParams
+    level: int
+    n_model: int
+    full: tuple                    # prime indices [Q_level..., P...], len M
+    M: int
+    M_pad: int
+    rows_loc: int                  # M_pad // n_model (rows per model rank)
+    # replicated main-basis tables (hoist y-stage; digit own rows are main)
+    q_main: np.ndarray             # (level+1, 1) u32
+    qneg_main: np.ndarray          # (level+1, 1)
+    psii_main: np.ndarray          # (level+1, N) mont
+    ninv_main: np.ndarray          # (level+1, 1) mont
+    # per-row tables over the padded extended basis (limb-sharded in specs)
+    q32: np.ndarray                # (M_pad, 1)
+    qneg: np.ndarray               # (M_pad, 1)
+    psi_m: np.ndarray              # (M_pad, N) mont twiddles
+    psii_m: np.ndarray             # (M_pad, N)
+    ninv_m: np.ndarray             # (M_pad, 1) mont
+    p_raise_m: np.ndarray          # (M_pad, 1) [P]_{q_i} mont; 0 off-main
+    digits: list                   # per digit: dict(sl, hat_inv_m, inv_d,
+    #                                W_full, D_full, own_mask)
+    md: dict                       # merged ModDown+Rescale tables
+
+
+def build_shard_tables(params: HEParams, level: int,
+                       n_model: int) -> ShardTables:
+    """Tables for ``make_sharded_hlt_fn`` — pure, deterministic, arena-owned.
+
+    Digit/ModDown BaseConv tables are expressed over the FULL padded row axis
+    (zero off their target rows) so each model rank's row block is a plain
+    slice — no per-device index bookkeeping inside the SPMD program.
+    """
+    ctx = get_context(params)
+    tools = RnsTools(ctx)
+    N = params.N
+    n_model = max(1, int(n_model))
+    bases = tools.digit_bases(level)
+    full = bases[0][2]
+    M = len(full)
+    rows_loc = -(-M // n_model)
+    M_pad = rows_loc * n_model
+    pos = {g: i for i, g in enumerate(full)}
+
+    def pad_rows(x: np.ndarray, copy_last: bool = False) -> np.ndarray:
+        if M_pad == M:
+            return x
+        pad = (np.repeat(x[-1:], M_pad - M, axis=0) if copy_last else
+               np.zeros((M_pad - M,) + x.shape[1:], x.dtype))
+        return np.concatenate([x, pad], axis=0)
+
+    rows = np.asarray(full)
+    qs = np.array([ctx.moduli_host[i] for i in full], np.uint64)[:, None]
+    q32 = qs.astype(np.uint32)
+    qneg = np.empty((M, 1), np.uint32)
+    for r_, i in enumerate(full):
+        qneg[r_, 0], _ = mm.mont_constants(ctx.moduli_host[i])
+    ninv_m = _mont(np.asarray(ctx.n_inv)[rows].astype(np.uint64), qs)
+
+    nq = level + 1
+    Pprod = 1
+    for i in range(params.num_main, params.num_total):
+        Pprod *= ctx.moduli_host[i]
+    p_raise = np.zeros((M, 1), np.uint64)
+    p_raise[:nq, 0] = [Pprod % ctx.moduli_host[i] for i in range(nq)]
+    p_raise_m = _mont(p_raise, qs)
+
+    digits = []
+    for own, gen, _ in bases:
+        hat_inv, W, D_mod_t, inv_d = tools._bc_tables(own, gen)
+        own_q = np.array([ctx.moduli_host[i] for i in own], np.uint64)[:, None]
+        na = len(own)
+        W_full = np.zeros((M, na), np.uint64)
+        D_full = np.zeros((M, 1), np.uint64)
+        gen_rows = np.array([pos[i] for i in gen])
+        W_full[gen_rows] = np.asarray(W, np.uint64)        # W is (|gen|, |own|)
+        D_full[gen_rows] = np.asarray(D_mod_t, np.uint64)
+        own_mask = np.zeros((M, 1), bool)
+        own_mask[[pos[i] for i in own]] = True
+        digits.append(dict(
+            sl=(pos[own[0]], pos[own[-1]] + 1),            # contiguous main rows
+            hat_inv_m=_mont(np.asarray(hat_inv, np.uint64), own_q),
+            inv_d=np.asarray(inv_d, np.float64),
+            W_full=pad_rows(_mont(W_full, qs)),
+            D_full=pad_rows(_mont(D_full, qs)),
+            own_mask=pad_rows(own_mask),
+        ))
+
+    # merged ModDown+Rescale: drop specials + q_level (order must match the
+    # single-device oracle: P_ext = specials, then q_level — the f64 overflow
+    # count v sums y rows in exactly this order)
+    spec = tuple(range(params.num_main, params.num_total))
+    P_ext = spec + (level,)
+    Q_out = tuple(range(level))
+    hat_inv, W, D_mod_t, inv_d = tools._bc_tables(P_ext, Q_out)
+    p_inv = tools._moddown_tables(P_ext, Q_out)
+    drop_rows = np.array([pos[i] for i in P_ext])
+    nd = len(P_ext)
+    hat_full = np.zeros((M, 1), np.uint64)
+    hat_full[drop_rows] = np.asarray(hat_inv, np.uint64)
+    sel_drop = np.zeros((nd, M_pad), np.uint32)
+    sel_drop[np.arange(nd), drop_rows] = 1
+    W_full = np.zeros((M, nd), np.uint64)
+    D_full = np.zeros((M, 1), np.uint64)
+    pinv_full = np.zeros((M, 1), np.uint64)
+    out_rows = np.array([pos[i] for i in Q_out])
+    W_full[out_rows] = np.asarray(W, np.uint64)            # (|Q_out|, |P_ext|)
+    D_full[out_rows] = np.asarray(D_mod_t, np.uint64)
+    pinv_full[out_rows] = np.asarray(p_inv, np.uint64)
+    md = dict(
+        n_drop=nd,
+        hat_inv_full=pad_rows(_mont(hat_full, qs)),
+        sel_drop=sel_drop,
+        inv_d=np.asarray(inv_d, np.float64),
+        W_full=pad_rows(_mont(W_full, qs)),
+        D_full=pad_rows(_mont(D_full, qs)),
+        p_inv_full=pad_rows(_mont(pinv_full, qs)),
+    )
+    return ShardTables(
+        params=params, level=level, n_model=n_model, full=full, M=M,
+        M_pad=M_pad, rows_loc=rows_loc,
+        q_main=q32[:nq], qneg_main=qneg[:nq],
+        psii_main=np.asarray(ctx.psi_inv_brv_mont)[rows[:nq]],
+        ninv_m=pad_rows(ninv_m, True), ninv_main=ninv_m[:nq],
+        q32=pad_rows(q32, True), qneg=pad_rows(qneg, True),
+        psi_m=pad_rows(np.asarray(ctx.psi_brv_mont)[rows], True),
+        psii_m=pad_rows(np.asarray(ctx.psi_inv_brv_mont)[rows], True),
+        p_raise_m=pad_rows(p_raise_m),
+        digits=digits, md=md)
+
+
+def _tab_keys(tabs: ShardTables) -> list:
+    return (["q32", "qneg", "psi_m", "psii_m", "ninv_m", "p_raise_m",
+             "md_hat_inv", "md_W", "md_D", "md_p_inv", "sel_drop"]
+            + [f"{pre}{j}" for j in range(len(tabs.digits))
+               for pre in ("W", "D", "mask")])
+
+
+def shard_operand_arrays(tabs: ShardTables) -> dict:
+    """The limb-sharded table operands passed INTO the shard_map program
+    (each model rank receives its row block via the in_specs — nothing is
+    dynamically indexed by device id inside the program)."""
+    out = dict(
+        q32=tabs.q32, qneg=tabs.qneg, psi_m=tabs.psi_m, psii_m=tabs.psii_m,
+        ninv_m=tabs.ninv_m, p_raise_m=tabs.p_raise_m,
+        md_hat_inv=tabs.md["hat_inv_full"], md_W=tabs.md["W_full"],
+        md_D=tabs.md["D_full"], md_p_inv=tabs.md["p_inv_full"],
+        sel_drop=tabs.md["sel_drop"],
+    )
+    for j, dg in enumerate(tabs.digits):
+        out[f"W{j}"] = dg["W_full"]
+        out[f"D{j}"] = dg["D_full"]
+        out[f"mask{j}"] = dg["own_mask"]
+    return {k: jnp.asarray(v) for k, v in out.items()}
+
+
+def _physical_axes(rules, logical: str) -> tuple:
+    """Mesh axis names a logical axis maps to (empty when unmapped/no mesh)."""
+    if rules is None or rules.mesh is None:
+        return ()
+    axes = rules.rules.get(logical) or ()
+    return tuple(a for a in axes if a in rules.mesh.shape)
+
+
+def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
+                        fp_dtype=jnp.float64, unroll: int = 1):
+    """Build the ``schedule="sharded"`` SPMD program for one compile point.
+
+    Returns ``fn(args) -> (acc0, acc1)`` where ``args`` is a dict:
+
+    ======== =========================== ====================================
+    key      shape                       sharding
+    ======== =========================== ====================================
+    c0f,c1f  (B, M_pad, N) u32           ct_batch x limbs (zero-extended rows)
+    c1rep    (B, level+1, N) u32         ct_batch only (hoist input, limb-rep)
+    slots    (B,) i32                    ct_batch (batch elem -> diag slot)
+    u        (S, d_pad, M_pad, N) u32    limbs (mont diagonals per slot)
+    rk0,rk1  (S, d_pad, b, M_pad, N) u32 limbs (mont rotation keys)
+    perms    (S, d_pad, N) i32           replicated
+    is_id    (S, d_pad, 1) i32           replicated
+    tab      shard_operand_arrays(tabs)  limbs (per-row constant tables)
+    ======== =========================== ====================================
+
+    B must be a multiple of the ct-axis device count (callers pad with zero
+    ciphertexts — core/compile.py). Outputs are (B, M_pad, N) x2 after the
+    merged ModDown+Rescale; real output rows are 0..level-1 (caller slices).
+
+    ModUp is collective-free: the hoist reads the limb-REPLICATED ``c1rep``
+    and every model rank materializes only its local digit rows. The merged
+    ModDown BaseConv is the ONLY collective — a ``psum`` of the (|drop|, N)
+    conversion inputs where each limb row has exactly one contributor, hence
+    exact (no float reordering) and bit-identical to the single-device MO
+    schedule.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    p = tabs.params
+    level, nq = tabs.level, tabs.level + 1
+    mesh = rules.mesh
+    limb_axes = _physical_axes(rules, "limbs") if tabs.n_model > 1 else ()
+    ct_axes = _physical_axes(rules, "ct_batch")
+    limb = limb_axes if limb_axes else None
+    ct = ct_axes if ct_axes else None
+
+    q_main = jnp.asarray(tabs.q_main)
+    qneg_main = jnp.asarray(tabs.qneg_main)
+    psii_main = jnp.asarray(tabs.psii_main)
+    ninv_main = jnp.asarray(tabs.ninv_main)
+    dig_hat = [jnp.asarray(dg["hat_inv_m"]) for dg in tabs.digits]
+    dig_invd = [jnp.asarray(dg["inv_d"].astype(fp_dtype))
+                for dg in tabs.digits]
+    dig_sl = [dg["sl"] for dg in tabs.digits]
+    md_invd = jnp.asarray(tabs.md["inv_d"].astype(fp_dtype))
+
+    def baseconv_rows(y, W_loc, D_loc, inv_d, q, qn):
+        """y (B, |S|, N) std-domain -> converted rows (B, rows_loc, N) over
+        this rank's row block (W/D are zero off the target rows)."""
+        v = jnp.floor(jnp.sum(y.astype(fp_dtype) * inv_d, axis=-2)
+                      + 0.5e-6).astype(jnp.uint32)               # (B, N)
+        prod = mm.montmul(y[:, None], W_loc[:, :, None],
+                          q[:, None], qn[:, None])   # (B, rows, |S|, N)
+        acc = _mod_reduce(prod, q[:, None], axis=-2)
+        corr = mm.montmul(v[:, None, :], D_loc, q, qn)
+        return mm.montsub(acc, corr, q)
+
+    def body(a):
+        t = a["tab"]
+        q, qn = t["q32"], t["qneg"]
+        c1rep = a["c1rep"]
+
+        # ---- hoist: Decomp + ModUp, collective-free off replicated c1 ----
+        digs = []
+        for j in range(len(dig_sl)):
+            s_, e_ = dig_sl[j]
+            coeff = ntt.intt_mont(c1rep[:, s_:e_], psii_main[s_:e_],
+                                  ninv_main[s_:e_], q_main[s_:e_],
+                                  qneg_main[s_:e_])
+            y = mm.montmul(coeff, dig_hat[j], q_main[s_:e_], qneg_main[s_:e_])
+            ext = baseconv_rows(y, t[f"W{j}"], t[f"D{j}"], dig_invd[j], q, qn)
+            ext_eval = ntt.ntt_mont(ext, t["psi_m"], q, qn)
+            digs.append(jnp.where(t[f"mask{j}"].astype(bool), a["c1f"],
+                                  ext_eval))
+        digits = jnp.stack(digs, axis=1)            # (B, beta', rows_loc, N)
+        c0e = mm.montmul(a["c0f"], t["p_raise_m"], q, qn)
+        c1e = mm.montmul(a["c1f"], t["p_raise_m"], q, qn)
+
+        # ---- rotation loop (fused Automorph->KeyIP->DiagIP, limb-local) ----
+        slots = a["slots"]
+        perms, is_id = a["perms"], a["is_id"]
+        u, rk0, rk1 = a["u"], a["rk0"], a["rk1"]
+
+        def rot_body(carry, ti):
+            a0, a1 = carry
+            pm = perms[slots, ti]                              # (B, N)
+            dig_rot = jnp.take_along_axis(
+                digits, pm[:, None, None, :], axis=-1)
+            c0r = jnp.take_along_axis(c0e, pm[:, None, :], axis=-1)
+            u_t = u[slots, ti]                                 # (B, rows, N)
+            k0w, k1w = rk0[slots, ti], rk1[slots, ti]
+            k0 = jnp.zeros_like(a0)
+            k1 = jnp.zeros_like(a1)
+            for j in range(nbeta):
+                k0 = mm.montadd(k0, mm.montmul(dig_rot[:, j], k0w[:, j],
+                                               q, qn), q)
+                k1 = mm.montadd(k1, mm.montmul(dig_rot[:, j], k1w[:, j],
+                                               q, qn), q)
+            sel = is_id[slots, ti].astype(bool)[:, :, None]    # (B, 1, 1)
+            t0 = jnp.where(sel, c0e, mm.montadd(k0, c0r, q))
+            t1 = jnp.where(sel, c1e, k1)
+            a0 = mm.montadd(a0, mm.montmul(u_t, t0, q, qn), q)
+            a1 = mm.montadd(a1, mm.montmul(u_t, t1, q, qn), q)
+            return (a0, a1), None
+
+        z = jnp.zeros(c0e.shape, jnp.uint32)
+        (acc0, acc1), _ = jax.lax.scan(rot_body, (z, z),
+                                       jnp.arange(d_pad), unroll=unroll)
+
+        # ---- merged ModDown+Rescale: the ONE collective (BaseConv psum) ----
+        def mod_down(acc):
+            xp = ntt.intt_mont(acc, t["psii_m"], t["ninv_m"], q, qn)
+            y = mm.montmul(xp, t["md_hat_inv"], q, qn)   # zero off drop rows
+            # scatter local drop rows to their P_ext position, then psum: one
+            # contributor per row -> the sum is exact (collective volume is
+            # the paper's BaseConv traffic, nothing else crosses ranks)
+            part = jnp.sum(t["sel_drop"][None, :, :, None] * y[:, None],
+                           axis=2)                       # (B, |drop|, N)
+            y_drop = (jax.lax.psum(part, limb_axes) if limb_axes else part)
+            conv = baseconv_rows(y_drop, t["md_W"], t["md_D"], md_invd, q, qn)
+            conv_eval = ntt.ntt_mont(conv, t["psi_m"], q, qn)
+            diff = mm.montsub(acc, conv_eval, q)
+            return mm.montmul(diff, t["md_p_inv"], q, qn)
+
+        return mod_down(acc0), mod_down(acc1)
+
+    in_specs = (dict(
+        c0f=P(ct, limb, None), c1f=P(ct, limb, None),
+        c1rep=P(ct, None, None), slots=P(ct),
+        u=P(None, None, limb, None),
+        rk0=P(None, None, None, limb, None),
+        rk1=P(None, None, None, limb, None),
+        perms=P(None, None, None), is_id=P(None, None, None),
+        tab={k: (P(None, limb) if k == "sel_drop" else P(limb, None))
+             for k in _tab_keys(tabs)},
+    ),)
+    out_specs = (P(ct, limb, None),) * 2
+    if mesh is None:
+        return body
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 def lower_mo_hlt_spmd(params: HEParams, mesh, rules, d: int = 127,

@@ -136,6 +136,16 @@ def to_mont_host(x: int, q: int) -> int:
     return (x << 32) % q
 
 
+def to_mont_host_arr(x: np.ndarray, qs: np.ndarray) -> np.ndarray:
+    """Vectorized to_mont_host: (x << 32) % q with broadcasting, as uint32.
+
+    Safe for q < 2^30 residues (x << 32 < 2^62 fits uint64). The one
+    Montgomery host encoder shared by every table builder (core/hlt_dist.py,
+    precompute paths) — keep byte-identical to the scalar to_mont_host."""
+    return ((x.astype(np.uint64) << np.uint64(32)) % qs.astype(np.uint64)
+            ).astype(np.uint32)
+
+
 # ---------------------------------------------------------------------------
 # primality / prime search (host)
 # ---------------------------------------------------------------------------

@@ -4,7 +4,8 @@ correction), ModUp, ModDown, Rescale.
 BaseConv is the only sub-operation that couples limbs (everything else in the
 HLT datapath is limb-local) — on the FPGA it is the unfused stage that incurs
 off-chip traffic; in the distributed TPU mapping it is the only stage that
-requires a cross-device collective when limbs are sharded (DESIGN.md §3).
+requires a cross-device collective when limbs are sharded (core/hlt_dist.py —
+the `schedule="sharded"` program's ONLY collective).
 
 All polynomials here are in the COEFFICIENT domain (BaseConv cannot be done in
 eval domain — paper §II-B3), shape (|S|, N) uint32.

@@ -30,7 +30,7 @@ DEFAULT_RULES: dict[str, Optional[tuple]] = {
     "layers": None,                # scan axis
     "fsdp": ("data",),             # ZeRO-3 style param shard over data
     # HE MM axes
-    "limbs": ("model",),           # RNS limb-parallel (DESIGN.md §3)
+    "limbs": ("model",),           # RNS limb-parallel (core/hlt_dist.py)
     "ct_batch": ("pod", "data"),   # independent ciphertexts / matrix blocks
     "coeff": None,
 }

@@ -47,14 +47,19 @@ class SecureMatmulEngine:
     schedule: Optional[str] = None   # DEPRECATED: None = cost-model selection
     rotation_chunk: Optional[int] = None
     batched: Optional[bool] = None   # default: batched iff fused schedule
+    mesh: Optional[object] = None    # jax Mesh: enables schedule="sharded"
+    #   (ciphertext tiles shard over pod×data, RNS limbs over model — the
+    #   2-D parallel block MM; the cost model picks it when worthwhile)
 
     def __post_init__(self):
-        self.ctx = HEContext(CkksEngine(self.params))
+        self.ctx = HEContext(CkksEngine(self.params), mesh=self.mesh)
         self.eng = self.ctx.eng
         assert 3 * self.tile * self.tile <= 2 * self.eng.params.slots
         self._plan = plan_hemm(self.eng, self.tile, self.tile, self.tile)
         if self.schedule is None:
-            self.schedule = select_schedule(self.params)
+            self.schedule = select_schedule(
+                self.params, n_model=self.ctx.n_model, n_ct=self.ctx.n_ct,
+                d=self._plan.ds_sigma.d, ctb=2 * self.tile)
         else:
             warnings.warn(
                 "SecureMatmulEngine(schedule=...) is deprecated: leave it "
@@ -62,7 +67,7 @@ class SecureMatmulEngine:
                 "programs explicitly via repro.core.compile.",
                 DeprecationWarning, stacklevel=3)
         if self.batched is None:
-            self.batched = self.schedule == "pallas"
+            self.batched = self.schedule in ("pallas", "sharded")
 
     @property
     def _keys(self) -> Optional[Keys]:
@@ -138,8 +143,13 @@ class SecureMatmulEngine:
             level=level, schedule=sched, rotation_chunk=chunk)
         outs = step1([A_tiles[i][k] for i, k in ik]
                      + [B_tiles[k][j] for k, j in kj])
-        # Decomp/ModUp across the whole tile set as ONE vmapped pipeline
-        hst = hoist_batched(eng, outs)
+        if sched == "sharded":
+            # the SPMD program hoists internally; Step 2 consumes the
+            # Step-1 ciphertexts directly (tile axis stays mesh-sharded)
+            hst = outs
+        else:
+            # Decomp/ModUp across the whole tile set as ONE vmapped pipeline
+            hst = hoist_batched(eng, outs)
         hA0 = {p: hst[t] for t, p in enumerate(ik)}
         hB0 = {p: hst[len(ik) + t] for t, p in enumerate(kj)}
         # Step 2 — per inner iteration, ONE launch over all A0 and B0 tiles

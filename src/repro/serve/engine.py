@@ -24,10 +24,14 @@ class ServeConfig:
     # secure (HE) layer serving — the engine owns an HEContext and compiles
     # slot-indexed HLT pipelines (core/compile.py).  he_schedule=None defers
     # to the cost model (select_schedule); setting it is the DEPRECATED
-    # string-threaded override.
+    # string-threaded override.  he_mesh (a jax Mesh with pod/data/model
+    # axes) enables the distributed schedule: ciphertext tiles shard over
+    # pod×data, RNS limbs over model (schedule="sharded" — cost-model
+    # selected, or forced via he_schedule).
     he_schedule: Optional[str] = None
     he_tile: int = 8
     he_rotation_chunk: Optional[int] = None   # None = cost-model VMEM pick
+    he_mesh: Optional[object] = None          # None = single device
 
 
 def build_secure_linears(cfg: ModelConfig, scfg: ServeConfig, weights: dict,
@@ -45,7 +49,7 @@ def build_secure_linears(cfg: ModelConfig, scfg: ServeConfig, weights: dict,
         he_params if he_params is not None
         else toy_params(logN=7, L=4, k=3, beta=2),
         tile=scfg.he_tile, schedule=scfg.he_schedule,
-        rotation_chunk=scfg.he_rotation_chunk)
+        rotation_chunk=scfg.he_rotation_chunk, mesh=scfg.he_mesh)
     return {i: SecureLinear(engine, np.asarray(W), rng)
             for i, W in weights.items() if i in cfg.secure_layers}
 

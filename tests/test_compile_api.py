@@ -220,6 +220,50 @@ def test_shim_baseline_ignores_hoisted(setup):
     _assert_ct_equal(plain, with_h)
 
 
+def test_vmem_headroom_threaded_and_chunk_pinnable(setup):
+    """The VMEM headroom is a named HEContext knob (costmodel.VMEM_HEADROOM
+    by default), recorded on every plan — and rotation_chunk=2 can be pinned
+    explicitly instead of relying on the headroom guess."""
+    from repro.core.costmodel import VMEM_HEADROOM
+    s = setup
+    assert s["ctx"].vmem_headroom == VMEM_HEADROOM
+    run = compile_hlt(s["ctx"], s["plan"].ds_sigma, level=s["ctA"].level,
+                      schedule="pallas", rotation_chunk=2)
+    assert run.plan.chunk == 2
+    assert run.plan.vmem_headroom == VMEM_HEADROOM
+    ctx2 = HEContext(s["ctx"].eng, s["ctx"].keys, vmem_headroom=0.5)
+    assert ctx2.vmem_headroom == 0.5
+    run2 = compile_hlt(ctx2, s["plan"].ds_sigma, level=s["ctA"].level)
+    assert run2.plan.vmem_headroom == 0.5
+    _assert_ct_equal(run2(s["ctA"]), run(s["ctA"]))
+
+
+def test_meshless_context_has_unit_mesh_axes(setup):
+    """No mesh -> single-device cost-model inputs and no sharded auto-pick."""
+    ctx = setup["ctx"]
+    assert ctx.mesh is None and ctx.n_model == 1 and ctx.n_ct == 1
+    prog = compile_hemm(ctx, setup["plan"])
+    assert prog.plan.schedule == "pallas"
+    assert prog.plan.collective_bytes == 0
+
+
+def test_sharded_single_device_fallback_bit_exact(setup):
+    """schedule="sharded" without a mesh runs the same SPMD body unsharded —
+    bit-exact vs mo, and its tables live in the arena (generation-guarded)."""
+    s = setup
+    ctx = HEContext(s["ctx"].eng, s["ctx"].keys)
+    run = compile_hlt(ctx, s["plan"].ds_sigma, level=s["ctA"].level,
+                      schedule="sharded")
+    mo = compile_hlt(ctx, s["plan"].ds_sigma, level=s["ctA"].level,
+                     schedule="mo")
+    _assert_ct_equal(run(s["ctA"]), mo(s["ctA"]))
+    kinds = {k[0] for k in ctx.arena._entries}
+    assert "sharded_tables" in kinds            # arena-owned, not module state
+    ctx.invalidate()
+    with pytest.raises(RuntimeError, match="stale compiled object"):
+        run(s["ctA"])
+
+
 def test_legacy_context_pool_bounded():
     from repro.core import compile as compile_mod
     rng = np.random.default_rng(0)

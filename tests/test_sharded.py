@@ -1,0 +1,198 @@
+"""Multi-device ``schedule="sharded"`` coverage on forced host CPU devices.
+
+Each test runs in a subprocess so ``XLA_FLAGS=--xla_force_host_platform_
+device_count`` takes effect before jax initializes (same pattern as
+test_distributed.py).  The shard_map'd limb-sharded MO-HLT behind
+``compile_hlt``/``compile_hemm`` (core/hlt_dist.py) must be BIT-exact vs the
+single-device MO schedule:
+
+* across ≥2 parameter sets, including one whose extended limb basis (M = 6)
+  is NOT divisible by the 4-way ``model`` axis — the limb-padding path;
+* for the full ``compile_hemm`` program on a 2-D (data × model) mesh,
+  including a batch size that does not divide the ciphertext axis (batch
+  padding with zero ciphertexts);
+* for the block MM over ciphertext tiles (SecureMatmulEngine), where tiles
+  shard over ``data`` and limbs over ``model`` — the 2-D parallel block MM.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 4, timeout: int = 1200) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# (params ctor args, model-parallel ways): the second set has M = L+1+k = 6
+# extended limbs — NOT divisible by model=4, exercising the limb-padding path.
+PARAM_CASES = [
+    ("logN6-L4-k3-div", "dict(logN=6, L=4, k=3, beta=2, scale_bits=26)", 4),
+    ("logN6-L3-k2-pad", "dict(logN=6, L=3, k=2, beta=2, scale_bits=26)", 4),
+]
+
+
+@pytest.mark.parametrize("name,kw,mp", PARAM_CASES,
+                         ids=[c[0] for c in PARAM_CASES])
+def test_sharded_hlt_bit_exact_vs_mo(name, kw, mp):
+    code = textwrap.dedent(f"""
+        import json
+        import numpy as np
+        import repro
+        from repro.core.ckks import CkksEngine
+        from repro.core.compile import HEContext, compile_hlt
+        from repro.core.hemm import plan_hemm, encrypt_matrix
+        from repro.core.params import toy_params
+        from repro.launch.mesh import make_mesh_for
+
+        params = toy_params(**{kw})
+        mesh = make_mesh_for(4, model_parallel={mp})
+        rng = np.random.default_rng(7)
+        ctx = HEContext(CkksEngine(params), mesh=mesh)
+        ref = HEContext(ctx.eng)                 # meshless oracle context
+        plan = plan_hemm(ctx.eng, 4, 3, 5)
+        ref.keys = ctx.keygen(rng, rot_steps=plan.rot_steps)
+        ctA = encrypt_matrix(ctx.eng, ctx.keys,
+                             rng.uniform(-1, 1, (4, 3)), rng)
+        ctB = encrypt_matrix(ctx.eng, ctx.keys,
+                             rng.uniform(-1, 1, (4, 3)), rng)
+        # mixed diagonal sets AND different d per element (common d_pad path)
+        items = [(ctA, plan.ds_sigma), (ctB, plan.ds_tau),
+                 (ctA, plan.ds_eps[0])]
+        run = compile_hlt(ctx, [ds for _, ds in items], level=ctA.level,
+                          schedule="sharded")
+        outs = run([it for it, _ in items])
+        ok = True
+        for (it, ds), o in zip(items, outs):
+            r = compile_hlt(ref, ds, level=it.level, schedule="mo")(it)
+            ok &= np.array_equal(np.asarray(r.c0), np.asarray(o.c0))
+            ok &= np.array_equal(np.asarray(r.c1), np.asarray(o.c1))
+            ok &= r.level == o.level and r.scale == o.scale
+        tabs = run._sharded[0]
+        print(json.dumps(dict(ok=ok, M=tabs.M, M_pad=tabs.M_pad,
+                              n_model=ctx.n_model,
+                              coll=run.plan.collective_bytes)))
+    """)
+    r = _run(code)
+    assert r["ok"], r
+    assert r["n_model"] == mp
+    assert r["coll"] > 0                     # plan reports collective bytes
+    if "pad" in name:
+        assert r["M_pad"] > r["M"]           # limb-padding path exercised
+    else:
+        assert r["M_pad"] == r["M"]
+
+
+def test_sharded_hemm_2d_mesh_bit_exact_and_batch_padding():
+    """Full compile_hemm on a 2×2 (data × model) mesh == MO bit-exactly, and
+    a 3-wide batched HLT on the 2-way ciphertext axis (3 % 2 != 0) takes the
+    zero-ciphertext batch-padding path and still matches MO."""
+    code = textwrap.dedent("""
+        import json
+        import numpy as np
+        import repro
+        from repro.core.ckks import CkksEngine
+        from repro.core.compile import HEContext, compile_hemm, compile_hlt
+        from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix
+        from repro.core.params import toy_params
+        from repro.launch.mesh import make_mesh_for
+
+        params = toy_params(logN=6, L=4, k=3, beta=2, scale_bits=26)
+        mesh = make_mesh_for(4, model_parallel=2)      # data=2 x model=2
+        rng = np.random.default_rng(3)
+        ctx = HEContext(CkksEngine(params), mesh=mesh)
+        m, l, n = 4, 3, 5
+        plan = plan_hemm(ctx.eng, m, l, n)
+        ctx.keygen(rng, rot_steps=plan.rot_steps)
+        A = rng.uniform(-1, 1, (m, l))
+        B = rng.uniform(-1, 1, (l, n))
+        ctA = encrypt_matrix(ctx.eng, ctx.keys, A, rng)
+        ctB = encrypt_matrix(ctx.eng, ctx.keys, B, rng)
+        sh = compile_hemm(ctx, plan, schedule="sharded")(ctA, ctB)
+        mo = compile_hemm(ctx, plan, schedule="mo")(ctA, ctB)
+        ok = (np.array_equal(np.asarray(sh.c0), np.asarray(mo.c0))
+              and np.array_equal(np.asarray(sh.c1), np.asarray(mo.c1)))
+        got = decrypt_matrix(ctx.eng, ctx.keys, sh, m, n)
+        err = float(np.abs(got - A @ B).max())
+        # batch 3 on a 2-way ct axis: padding with zero ciphertexts
+        runb = compile_hlt(ctx, [plan.ds_sigma, plan.ds_tau, plan.ds_sigma],
+                           level=ctA.level, schedule="sharded")
+        outs = runb([ctA, ctB, ctB])
+        okb = True
+        for (it, ds), o in zip([(ctA, plan.ds_sigma), (ctB, plan.ds_tau),
+                                (ctB, plan.ds_sigma)], outs):
+            r = compile_hlt(ctx, ds, level=it.level, schedule="mo")(it)
+            okb &= np.array_equal(np.asarray(r.c0), np.asarray(o.c0))
+            okb &= np.array_equal(np.asarray(r.c1), np.asarray(o.c1))
+        prog = compile_hemm(ctx, plan, schedule="sharded")
+        print(json.dumps(dict(ok=ok, okb=okb, err=err,
+                              coll=prog.plan.collective_bytes,
+                              n_ct=ctx.n_ct, n_model=ctx.n_model)))
+    """)
+    r = _run(code)
+    assert r["ok"] and r["okb"], r
+    assert r["err"] < 0.05
+    assert r["coll"] > 0 and r["n_ct"] == 2 and r["n_model"] == 2
+
+
+def _blockmm_code(m, l, n):
+    return textwrap.dedent(f"""
+        import json, warnings
+        import numpy as np
+        import repro
+        from repro.core.params import toy_params
+        from repro.launch.mesh import make_mesh_for
+        from repro.secure import SecureMatmulEngine
+
+        TOY = toy_params(logN=6, L=4, k=3, beta=2)
+        mesh = make_mesh_for(4, model_parallel=2)
+        rng = np.random.default_rng(4)
+        A = rng.uniform(-1, 1, ({m}, {l}))
+        B = rng.uniform(-1, 1, ({l}, {n}))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            e_sh = SecureMatmulEngine(TOY, tile=4, schedule="sharded",
+                                      mesh=mesh)
+            e_mo = SecureMatmulEngine(TOY, tile=4, schedule="mo")
+        e_sh.keygen(np.random.default_rng(9))
+        e_mo.ctx.keys = e_sh.ctx.keys            # same engine/key material
+        At = e_sh.encrypt_tiles(A, rng)
+        Bt = e_sh.encrypt_tiles(B, rng)
+        C_sh = e_sh.matmul_encrypted(At, Bt, batched=True)
+        C_mo = e_mo.matmul_encrypted(At, Bt, batched=False)
+        ok = all(np.array_equal(np.asarray(a.c0), np.asarray(b.c0)) and
+                 np.array_equal(np.asarray(a.c1), np.asarray(b.c1))
+                 for ra, rb in zip(C_sh, C_mo) for a, b in zip(ra, rb))
+        err = float(np.abs(e_sh.decrypt_tiles(C_sh, {m}, {n})
+                           - A @ B).max())
+        print(json.dumps(dict(ok=ok, err=err)))
+    """)
+
+
+def test_sharded_blockmm_small_bit_exact_vs_mo():
+    """6×5 @ 5×7 tile=4 on a 2×2 mesh: tiles sharded over `data`, limbs over
+    `model`; every output tile bit-equal to the sequential MO tile loop."""
+    r = _run(_blockmm_code(6, 5, 7))
+    assert r["ok"], r
+    assert r["err"] < 0.1
+
+
+@pytest.mark.slow
+def test_sharded_blockmm_10x7_7x13_bit_exact_vs_mo():
+    """The acceptance shape: non-square 10×7 @ 7×13 (tile=4 → ragged 3×2 @
+    2×4 tile grid) — sharded 2-D parallel block MM == MO, bit for bit."""
+    r = _run(_blockmm_code(10, 7, 13))
+    assert r["ok"], r
+    assert r["err"] < 0.1
