@@ -11,10 +11,11 @@ quantity: counts, MB, speedups, ...). Sections:
              paper's FPGA speedups
   blockmm  — batched block MM (slot-indexed fused pipelines over all
              ciphertext tiles) vs the sequential tile loop
-  dist     — schedule="sharded" (limb-sharded shard_map MO-HLT) across
-             forced host-device counts (subprocesses set XLA_FLAGS):
-             per-device-count wall times + measured-vs-predicted collective
-             bytes
+  dist     — schedule="sharded" (limb-sharded shard_map MO-HLT driving the
+             fused Pallas kernel per rank) across forced host-device counts
+             (subprocesses set XLA_FLAGS): fused vs "sharded_xla" wall
+             times, measured-vs-predicted collective bytes, and in-program
+             hoist bytes before/after the ct-slot dedup
   kernels  — Pallas kernel calls (interpret mode) vs jnp oracle
   roofline — §Roofline table from results/dryrun/*.json (if present)
 
@@ -149,12 +150,9 @@ def bench_fig6_schedules(smoke: bool = False):
 
     # operand footprint of the compiled Step-2 (2·l HLTs): key/diag tensors
     # deduped to unique slots, hoisting digits stored 2× (A0/B0) instead of
-    # 2·l× — the arena numbers the --json consumers track.
+    # 2·l× — now straight off the plan's ct-slot accounting.
     s2 = prog_pl.plan.step2
-    p = eng.params
-    m_ext = len(eng.tools.digit_bases(s2.level)[0][2])
-    h_bytes = (s2.nbeta + 2) * m_ext * p.N * 4       # digits + c0e + c1e
-    hoist_dedup, hoist_naive = 2 * h_bytes, s2.batch * h_bytes
+    hoist_dedup, hoist_naive = s2.hoist_bytes, s2.hoist_bytes_naive
     row("fig6/operands/step2_diag", None,
         f"dedup_MB={s2.operand_bytes / 2**20:.3f};"
         f"naive_MB={s2.operand_bytes_naive / 2**20:.3f}")
@@ -263,12 +261,23 @@ def timed(fn):
 
 run = compile_hlt(ctx, [plan.ds_sigma] * BATCH, level=cts[0].level,
                   schedule="sharded")
+runx = compile_hlt(ctx, [plan.ds_sigma] * BATCH, level=cts[0].level,
+                   schedule="sharded_xla")
 st = collective_stats(run.sharded_hlo(cts))
+# hoist-dedup story: the hemm Step-2 aliasing pattern (2 unique inputs
+# across the batch) — bytes before/after the ct-slot dedup, from the plans
+hint = tuple(b % 2 for b in range(BATCH))
+aliased = compile_hlt(ctx, [plan.ds_sigma] * BATCH, level=cts[0].level,
+                      schedule="sharded", ct_slots=hint)
 res = dict(devices=DEV, n_model=ctx.n_model, n_ct=ctx.n_ct,
            sharded_us=round(timed(lambda: run(cts)), 1),
+           sharded_xla_us=round(timed(lambda: runx(cts)), 1),
            predicted_collective_bytes=run.plan.collective_bytes,
            measured_collective_bytes=st.total_bytes,
-           collective_count=st.count)
+           collective_count=st.count,
+           hoist_bytes_dedup=aliased.plan.hoist_bytes,
+           hoist_bytes_naive=aliased.plan.hoist_bytes_naive,
+           n_ct_slots=aliased.plan.n_ct_slots)
 if DEV == 1:
     mo = compile_hlt(ctx, [plan.ds_sigma] * BATCH, level=cts[0].level,
                      schedule="mo")
@@ -278,12 +287,19 @@ print(json.dumps(res))
 
 
 def bench_dist(smoke: bool = False):
-    """schedule="sharded" (limb-sharded shard_map MO-HLT, core/hlt_dist.py)
-    across forced host-device counts: per-count wall time of one batched HLT
-    plus the plan's PREDICTED collective bytes vs the bytes MEASURED in the
-    compiled HLO (distributed/hlo_analysis.collective_stats).  Measured
-    counts full all-reduce operand traffic; predicted is the ring-adjusted
-    per-device estimate — same order, different convention."""
+    """schedule="sharded" (limb-sharded shard_map MO-HLT through the FUSED
+    Pallas datapath, core/hlt_dist.py) across forced host-device counts:
+    per-count wall time of one batched HLT for the fused datapath vs the
+    "sharded_xla" pre-fusion baseline, the plan's PREDICTED collective bytes
+    vs the bytes MEASURED in the compiled HLO
+    (distributed/hlo_analysis.collective_stats), and the in-program hoist
+    bytes before/after the ct-slot dedup on the hemm-Step-2 aliasing
+    pattern.  Measured counts full all-reduce operand traffic; predicted is
+    the ring-adjusted per-device estimate — same order, different
+    convention.  (Interpret-mode caveat: on CPU the fused kernel runs in the
+    Pallas interpreter, so fused-vs-XLA wall times track lowering overhead,
+    not TPU datapath reuse — the trajectory, not the speedup, is the
+    signal.)"""
     counts = (1, 4) if smoke else (1, 2, 4)
     reps = 1 if smoke else 3
     batch = 4
@@ -304,6 +320,12 @@ def bench_dist(smoke: bool = False):
             f"coll_pred_B={res['predicted_collective_bytes']};"
             f"coll_meas_B={res['measured_collective_bytes']};"
             f"n_model={res['n_model']}")
+        row(f"dist/devices={dev}/sharded_xla_hlt", res["sharded_xla_us"],
+            f"fused_vs_xla={res['sharded_xla_us'] / res['sharded_us']:.2f}x")
+        row(f"dist/devices={dev}/step2_hoist", None,
+            f"dedup_B={res['hoist_bytes_dedup']};"
+            f"naive_B={res['hoist_bytes_naive']};"
+            f"n_ct_slots={res['n_ct_slots']}")
         if "mo_us" in res:
             row(f"dist/devices={dev}/mo_hlt", res["mo_us"],
                 "single-device reference")

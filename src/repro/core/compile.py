@@ -40,9 +40,9 @@ import jax.numpy as jnp
 
 from repro.core import hlt as hlt_mod, hlt_dist
 from repro.core.ckks import Ciphertext, CkksEngine, Keys
-from repro.core.costmodel import (VMEM_HEADROOM, hlt_stage_costs,
-                                  pick_rotation_chunk, select_schedule,
-                                  sharded_collective_bytes)
+from repro.core.costmodel import (VMEM_HEADROOM, hlt_hoist_bytes,
+                                  hlt_stage_costs, pick_rotation_chunk,
+                                  select_schedule, sharded_collective_bytes)
 from repro.core.hlt import DiagSet, Hoisted, hoist, hoist_batched
 from repro.distributed.sharding import logical_axis_size, make_rules
 
@@ -85,6 +85,7 @@ class OperandArena:
         self._entries: dict = {}
 
     def slot(self, kind: str, obj, extra: tuple, builder):
+        """Return ``(slot_id, value)`` for the key, building it on miss."""
         key = (kind, _StrongKey(obj), extra)
         hit = self._entries.get(key)
         if hit is None:
@@ -97,6 +98,7 @@ class OperandArena:
 
     @property
     def nbytes(self) -> int:
+        """Total device bytes held across every arena slot."""
         total = 0
         for _, value in self._entries.values():
             for arr in jax.tree_util.tree_leaves(value):
@@ -104,6 +106,7 @@ class OperandArena:
         return total
 
     def clear(self) -> None:
+        """Drop every slot (HEContext.invalidate calls this on re-keygen)."""
         self._entries.clear()
 
 
@@ -152,12 +155,14 @@ class HEContext:
     def create(cls, params, rng: np.random.Generator,
                rot_steps: Sequence[int] = (), mesh=None,
                vmem_headroom: Optional[float] = None) -> "HEContext":
+        """Build an engine from ``params`` and keygen in one call."""
         ctx = cls(CkksEngine(params), mesh=mesh, vmem_headroom=vmem_headroom)
         ctx.keygen(rng, rot_steps=rot_steps)
         return ctx
 
     def keygen(self, rng: np.random.Generator,
                rot_steps: Sequence[int] = ()) -> Keys:
+        """Generate fresh keys and invalidate every cached operand."""
         self.keys = self.eng.keygen(rng, rot_steps=rot_steps)
         self.invalidate()
         return self.keys
@@ -182,7 +187,7 @@ class HEContext:
     # -- jitted pipelines (merged ModDown+Rescale included) ------------------
 
     def _pallas_pipeline(self, level: int, chunk: int, kind: str):
-        """kind: "single" (one ct), "indexed" (slot-indexed batch)."""
+        """Jitted fused-kernel pipeline; kind = "single" | "indexed"."""
         key = ("pallas", kind, level, chunk)
         fn = self._jit.get(key)
         if fn is not None:
@@ -212,18 +217,30 @@ class HEContext:
         self._jit[key] = fn
         return fn
 
-    def _sharded_pipeline(self, tabs, d_pad: int, nbeta: int):
+    def _sharded_pipeline(self, tabs, d_pad: int, nbeta: int,
+                          datapath: str = "pallas",
+                          chunk: Optional[int] = None,
+                          hoist_layout: str = "dedup"):
         """Jitted shard_map SPMD MO-HLT (core/hlt_dist.py) for one compile
         point; batch/slot-count changes retrace automatically (arg shapes).
-        The f64 BaseConv correction keeps CPU runs bit-exact vs the MO
-        oracle; TPU runs use the native f32 path."""
-        key = ("sharded", tabs.level, tabs.n_model, d_pad, nbeta)
+
+        ``datapath="pallas"`` drives each model rank's limb shard through the
+        fused Pallas kernel, with the hoist inputs laid out per
+        ``hoist_layout`` ("dedup" = unique cts replicated over the ct axis,
+        "element" = per-element cts sharded over it — CompiledHLT picks per
+        call); ``"xla"`` is the pre-fusion scan baseline
+        (``schedule="sharded_xla"``).  The f64 BaseConv correction keeps CPU
+        runs bit-exact vs the MO oracle; TPU runs use the native f32 path.
+        """
+        key = ("sharded", datapath, hoist_layout, tabs.level, tabs.n_model,
+               d_pad, nbeta, chunk)
         fn = self._jit.get(key)
         if fn is not None:
             return fn
         fp = jnp.float64 if jax.default_backend() == "cpu" else jnp.float32
         fn = jax.jit(hlt_dist.make_sharded_hlt_fn(
-            tabs, self.rules, d_pad=d_pad, nbeta=nbeta, fp_dtype=fp))
+            tabs, self.rules, d_pad=d_pad, nbeta=nbeta, fp_dtype=fp,
+            datapath=datapath, chunk=chunk, hoist_layout=hoist_layout))
         self._jit[key] = fn
         return fn
 
@@ -239,6 +256,7 @@ _LEGACY_POOL_MAX = 8
 
 
 def legacy_context(eng: CkksEngine, keys: Keys) -> HEContext:
+    """Pooled HEContext for the deprecated string-threaded shims (LRU)."""
     key = (_StrongKey(eng), _StrongKey(keys))
     ctx = _LEGACY_CONTEXTS.pop(key, None)
     if ctx is None:
@@ -256,7 +274,35 @@ def legacy_context(eng: CkksEngine, keys: Keys) -> HEContext:
 
 @dataclasses.dataclass(frozen=True)
 class HLTPlan:
-    """The cost model's output for one compiled HLT — fully inspectable."""
+    """The cost model's output for one compiled HLT — fully inspectable.
+
+    Sizing fields: ``level`` is the input ciphertext level (output is one
+    lower); ``batch`` is the compile-time batch width (``None`` = a
+    single-ciphertext compile); ``nbeta`` is the digit count β' at this
+    level; ``d`` holds each batch element's REAL diagonal count and
+    ``d_pad`` the common padded rotation count (a ``chunk`` multiple —
+    padding rotations are identity+zero-diagonal and contribute nothing).
+
+    Operand-dedup fields: ``diag_slots`` maps batch index -> unique
+    diagonal-set arena slot (``n_diag_slots`` unique); ``ct_slots`` is the
+    compile-time input-aliasing hint (batch index -> unique input
+    ciphertext, ``None`` = unknown until call time) and ``n_ct_slots`` its
+    unique count — the number of hoisting products the execution stores
+    (sharded: hoists per rank).  ``operand_bytes`` / ``operand_bytes_naive``
+    are the key+diagonal bytes after / before slot dedup, and
+    ``hoist_bytes`` / ``hoist_bytes_naive`` the same for hoisting products
+    (``sharded_xla`` re-hoists per element, so there they are equal).
+
+    Execution-shape fields: ``chunk`` is the rotation chunk the fused kernel
+    keeps resident per grid step (the cost model's VMEM-budget pick — under
+    ``sharded`` this is the PER-RANK chunk applied to the limb-row shard);
+    ``rotations`` counts real rotations per execution; ``stage_costs`` holds
+    the per-stage byte/rotation/collective counts (costmodel.hlt_stage_costs);
+    ``collective_bytes`` is the predicted cross-device traffic per execution
+    (0 off-mesh); ``n_model``/``n_ct`` are the mesh factorization the compile
+    saw, and ``vmem_headroom`` the VMEM fraction the chunk pick used.
+    """
+
     schedule: str                       # chosen schedule
     level: int                          # input ciphertext level
     batch: Optional[int]                # None = single-ciphertext compile
@@ -274,9 +320,14 @@ class HLTPlan:
     n_model: int = 1                    # limb-sharding ways (mesh `model`)
     n_ct: int = 1                       # ct-batch-sharding ways (pod×data)
     vmem_headroom: float = VMEM_HEADROOM  # VMEM fraction the chunk pick used
+    ct_slots: Optional[tuple] = None    # batch index -> unique input ct
+    n_ct_slots: Optional[int] = None    # unique hoisting products stored
+    hoist_bytes: int = 0                # hoisting-product bytes after dedup
+    hoist_bytes_naive: int = 0          # per-element (no-dedup) hoist bytes
 
     @property
     def dedup_factor(self) -> float:
+        """Key/diagonal operand-memory reduction of the slot dedup (≥ 1)."""
         return self.operand_bytes_naive / max(1, self.operand_bytes)
 
 
@@ -284,15 +335,41 @@ def _operand_nbytes(ops_tuple) -> int:
     return sum(int(a.nbytes) for a in ops_tuple)
 
 
+def _dedup_by_identity(items):
+    """Batch elements -> (unique_items, slots): first-appearance order.
+
+    The ONE numbering convention for operand/ct slots — compile-time DiagSet
+    slots, the canonicalized ``ct_slots`` hint, and the call-time identity
+    pattern are all produced by (or compared against) this order.
+    """
+    local, uniq, slots = {}, [], []
+    for it in items:
+        k = id(it)
+        if k not in local:
+            local[k] = len(uniq)
+            uniq.append(it)
+        slots.append(local[k])
+    return uniq, slots
+
+
 def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
                 level: Optional[int] = None, batch: Optional[int] = None,
                 schedule: Optional[str] = None,
-                rotation_chunk: Optional[int] = None) -> "CompiledHLT":
+                rotation_chunk: Optional[int] = None,
+                ct_slots: Optional[Sequence[int]] = None) -> "CompiledHLT":
     """Run the cost model once and return a reusable CompiledHLT.
 
     ``diags``: one DiagSet (single-ciphertext compile, or — with ``batch=B``
     — a B-wide batch sharing that DiagSet) or a sequence of DiagSets (one per
     batch element; duplicates share one operand slot).
+
+    ``ct_slots``: optional input-aliasing hint — one slot id per batch
+    element, equal ids meaning "the SAME ciphertext will be passed here"
+    (hemm Step-2 passes ``(0,)*l + (1,)*l``).  The hint sizes the plan's
+    hoisting-dedup byte counts and pre-builds the sharded program's
+    slot tables in the arena; execution always re-derives the actual
+    aliasing from object identity, so a mismatched hint degrades plan
+    accounting, never correctness.
 
     ``schedule=None`` lets the cost model choose (select_schedule);
     ``rotation_chunk=None`` takes the VMEM-budget pick.  Compiles are memoized
@@ -313,20 +390,31 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
     nbeta = len(eng.tools.digit_bases(level))
     d_list = tuple(ds.d for ds in diag_list)
     d_max = max(d_list)
+    if ct_slots is not None:
+        # canonicalize the aliasing hint to first-appearance numbering so it
+        # can be compared against the identity-derived pattern at call time
+        assert len(ct_slots) == len(diag_list), (len(ct_slots), len(diag_list))
+        remap: dict = {}
+        ct_slots = tuple(remap.setdefault(s, len(remap)) for s in ct_slots)
     if schedule is None:
         schedule = select_schedule(
             eng.params, nbeta=nbeta, headroom=ctx.vmem_headroom,
             n_model=ctx.n_model, n_ct=ctx.n_ct, d=d_max,
-            ctb=batch if batch is not None else 1)
+            ctb=batch if batch is not None else 1,
+            n_uniq=None if ct_slots is None else len(set(ct_slots)))
     assert schedule in hlt_mod.SCHEDULES, schedule
+    sharded = schedule.startswith("sharded")
 
-    memo_key = ("hlt", schedule, level, batch, rotation_chunk,
+    memo_key = ("hlt", schedule, level, batch, rotation_chunk, ct_slots,
                 tuple(_StrongKey(ds) for ds in diag_list))
     hit = ctx._compiled.get(memo_key)
     if hit is not None:
         return hit
 
-    if rotation_chunk is None and schedule == "pallas":
+    if rotation_chunk is None and schedule in ("pallas", "sharded"):
+        # the fused kernel's per-grid-step working set must fit VMEM; under
+        # "sharded" the SAME pick applies per rank (the kernel sees the
+        # limb-row shard, so the budget formula is unchanged per row)
         chunk = max(1, min(pick_rotation_chunk(
             eng.params, nbeta=nbeta, headroom=ctx.vmem_headroom), d_max))
     elif rotation_chunk is None:
@@ -336,25 +424,19 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
     d_pad = -(-d_max // chunk) * chunk
 
     # unique-operand slots: one arena entry per distinct DiagSet
-    local = {}                          # id(ds) -> local slot
-    uniq: list = []                     # local slot -> DiagSet
-    slots = []
-    for ds in diag_list:
-        k = id(ds)
-        if k not in local:
-            local[k] = len(uniq)
-            uniq.append(ds)
-        slots.append(local[k])
+    uniq, slots = _dedup_by_identity(diag_list)
 
+    ctb = batch if batch is not None else 1
     operands = None
     sharded_tabs = None
-    if schedule in ("pallas", "sharded"):
+    slot_tables = None
+    if schedule == "pallas" or sharded:
         per = [ctx.arena.slot(
                    "pallas_operands", ds, (level, nbeta, d_pad),
                    lambda ds=ds: hlt_mod._build_pallas_operands(
                        eng, ds, ctx.keys, level, nbeta, d_pad))[1]
                for ds in uniq]
-        if schedule == "sharded":
+        if sharded:
             # one stacked-and-limb-padded operand set per UNIQUE DiagSet;
             # the SPMD program gathers by slot (same dedup as the fused
             # kernel).  DistTables-style constants live in the arena, keyed
@@ -376,6 +458,13 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
                 stacked[2] = jnp.pad(rk1, ((0, 0), (0, 0), (0, 0), (0, pad),
                                            (0, 0)))
             operands = tuple(stacked)
+            # batch-index -> slot tables, padded to the ct-axis multiple,
+            # arena-owned like every other operand (hlt_dist.build_slot_tables)
+            b_pad = -(-ctb // max(1, ctx.n_ct)) * max(1, ctx.n_ct)
+            _, slot_tables = ctx.arena.slot(
+                "sharded_slot_tables", eng,
+                (level, tuple(slots), ct_slots, b_pad),
+                lambda: hlt_dist.build_slot_tables(slots, ct_slots, b_pad))
         elif batch is None:
             operands = per[0]
         else:
@@ -384,7 +473,14 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
     op_bytes = _operand_nbytes(operands) if operands is not None else 0
     naive = (op_bytes if batch is None else
              op_bytes // max(1, len(uniq)) * len(diag_list))
-    ctb = batch if batch is not None else 1
+    # hoisting-product accounting: one product per UNIQUE input ciphertext
+    # (the ct-slot dedup), except sharded_xla which re-hoists per element
+    # and baseline which never hoists.  Without a hint, assume all-distinct.
+    m_ext = len(eng.tools.digit_bases(level)[0][2])
+    h_unit = int(hlt_hoist_bytes(eng.params, nbeta=nbeta, n_limbs_ext=m_ext))
+    n_ct_slots = None if ct_slots is None else len(set(ct_slots))
+    n_hoist = ctb if (n_ct_slots is None or schedule == "sharded_xla") \
+        else n_ct_slots
     plan = HLTPlan(
         schedule=schedule, level=level, batch=batch, nbeta=nbeta, chunk=chunk,
         d=d_list, d_pad=d_pad, diag_slots=tuple(slots),
@@ -392,18 +488,21 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
         operand_bytes=op_bytes, operand_bytes_naive=naive,
         stage_costs=hlt_stage_costs(
             eng.params, d=d_max, d_pad=d_pad, nbeta=nbeta, chunk=chunk,
-            n_limbs_ext=len(eng.tools.digit_bases(level)[0][2]),
-            n_model=ctx.n_model if schedule == "sharded" else 1, ctb=ctb),
+            n_limbs_ext=m_ext,
+            n_model=ctx.n_model if sharded else 1, ctb=ctb, n_hoist=n_hoist),
         collective_bytes=(sharded_collective_bytes(
-            # the psum moves the zero-ct PADDED batch, not the logical one
+            # the psum moves the slot-PADDED batch, not the logical one
             eng.params, n_model=ctx.n_model,
             ctb=-(-ctb // max(1, ctx.n_ct)) * max(1, ctx.n_ct))
-            if schedule == "sharded" else 0),
-        n_model=ctx.n_model if schedule == "sharded" else 1,
-        n_ct=ctx.n_ct if schedule == "sharded" else 1,
-        vmem_headroom=ctx.vmem_headroom)
+            if sharded else 0),
+        n_model=ctx.n_model if sharded else 1,
+        n_ct=ctx.n_ct if sharded else 1,
+        vmem_headroom=ctx.vmem_headroom,
+        ct_slots=ct_slots, n_ct_slots=n_ct_slots,
+        hoist_bytes=0 if schedule == "baseline" else h_unit * n_hoist,
+        hoist_bytes_naive=0 if schedule == "baseline" else h_unit * ctb)
     run = CompiledHLT(ctx, plan, tuple(diag_list), tuple(uniq), operands,
-                      sharded_tabs=sharded_tabs)
+                      sharded_tabs=sharded_tabs, slot_tables=slot_tables)
     ctx._compiled[memo_key] = run
     return run
 
@@ -417,20 +516,16 @@ class CompiledHLT:
     """
 
     def __init__(self, ctx: HEContext, plan: HLTPlan, diag_list, uniq_diags,
-                 operands, sharded_tabs=None):
+                 operands, sharded_tabs=None, slot_tables=None):
         self.ctx = ctx
         self.plan = plan
         self._diags = diag_list         # strong refs, one per batch element
         self._uniq = uniq_diags
         self._operands = operands       # single tuple | stacked tuple | None
         self._sharded = sharded_tabs    # (ShardTables, table arrays) | None
+        self._slot_tables = slot_tables  # arena {"diag": (b_pad,), "ct": ...}
         self._diag_slots = (None if plan.batch is None else
                             jnp.asarray(np.array(plan.diag_slots, np.int32)))
-        if sharded_tabs is not None:    # slots padded to the ct-axis multiple
-            B = plan.batch or 1
-            b_pad = -(-B // max(1, ctx.n_ct)) * max(1, ctx.n_ct)
-            padded = list(plan.diag_slots)[:B] + [0] * (b_pad - B)
-            self._sharded_slots = jnp.asarray(np.array(padded, np.int32))
         self._gen = ctx._generation
 
     # -- helpers -------------------------------------------------------------
@@ -439,13 +534,7 @@ class CompiledHLT:
         """Dedupe by object identity, hoist unique ciphertexts in ONE batched
         pipeline, return (unique_hoisted, ct_slots)."""
         eng = self.ctx.eng
-        local, uniq, slots = {}, [], []
-        for it in items:
-            k = id(it)
-            if k not in local:
-                local[k] = len(uniq)
-                uniq.append(it)
-            slots.append(local[k])
+        uniq, slots = _dedup_by_identity(items)
         cts = [(i, it) for i, it in enumerate(uniq)
                if not isinstance(it, Hoisted)]
         hoisted = list(uniq)
@@ -464,7 +553,7 @@ class CompiledHLT:
 
     def __call__(self, items):
         self.ctx._check_generation(self._gen)
-        if self.plan.schedule == "sharded":
+        if self.plan.schedule.startswith("sharded"):
             if self.plan.batch is None:
                 return self._run_sharded([items])[0]
             items = list(items)
@@ -503,10 +592,28 @@ class CompiledHLT:
         c0, c1 = fn(hst.digits, hst.c0_ext, hst.c1_ext, *operands)
         return self._finish(c0, c1, hst.scale, ds)
 
-    def _sharded_args(self, items) -> dict:
-        """Pack the shard_map argument dict: stack the ciphertext batch, pad
-        it to a ct-axis multiple with zero ciphertexts (they flow zeros and
-        are dropped again), zero-extend the limb axis to the padded shard."""
+    @property
+    def _datapath(self) -> str:
+        return "xla" if self.plan.schedule == "sharded_xla" else "pallas"
+
+    def _sharded_args(self, items):
+        """Pack the shard_map argument dict; returns ``(args, hoist_layout)``.
+
+        Fused ("pallas"): dedupe the batch by object identity and pick the
+        hoist layout that performs FEWER hoists per rank — "dedup" stacks
+        only the H unique ciphertexts (replicated over the ct axis, each
+        rank hoists H) when H fits a rank's batch share, else "element"
+        keeps the per-element stacking sharded over the ct axis (each rank
+        hoists its B_loc local elements).  Either way the limb axis is
+        zero-extended to the padded shard and the ct-slot vector routes each
+        batch element to its hoisting product; padding elements alias slot 0
+        (dedup) or are zero ciphertexts (element) and their outputs are
+        dropped.  Prefers the arena-owned slot tables when the call-time
+        aliasing matches the compile-time ``ct_slots`` hint.
+
+        XLA baseline ("sharded_xla"): per-element stacking, padded with zero
+        ciphertexts (they flow zeros and are dropped again).
+        """
         plan = self.plan
         tabs, tab_arrays = self._sharded
         for it in items:
@@ -515,26 +622,54 @@ class CompiledHLT:
                 "Ciphertexts, not hoisting products"
             assert it.level == plan.level, (it.level, plan.level)
         B = len(items)
-        b_pad = self._sharded_slots.shape[0]
-        c0 = jnp.stack([it.c0 for it in items])
-        c1 = jnp.stack([it.c1 for it in items])
-        if b_pad > B:
-            z = jnp.zeros((b_pad - B,) + c0.shape[1:], jnp.uint32)
-            c0 = jnp.concatenate([c0, z])
-            c1 = jnp.concatenate([c1, z])
+        diag_tab = self._slot_tables["diag"]
+        b_pad = diag_tab.shape[0]
+        b_loc = b_pad // max(1, self.ctx.n_ct)    # batch share of one ct rank
         rows_pad = tabs.M_pad - (plan.level + 1)
         ext = ((0, 0), (0, rows_pad), (0, 0))
         u, rk0, rk1, perms, is_id = self._operands
-        return dict(
-            c0f=jnp.pad(c0, ext), c1f=jnp.pad(c1, ext), c1rep=c1,
-            slots=self._sharded_slots,
-            u=u, rk0=rk0, rk1=rk1, perms=perms, is_id=is_id, tab=tab_arrays)
+        common = dict(u=u, rk0=rk0, rk1=rk1, perms=perms, is_id=is_id,
+                      tab=tab_arrays)
+
+        def stack_padded(its):
+            c0 = jnp.stack([it.c0 for it in its])
+            c1 = jnp.stack([it.c1 for it in its])
+            if b_pad > len(its):
+                z = jnp.zeros((b_pad - len(its),) + c0.shape[1:], jnp.uint32)
+                c0 = jnp.concatenate([c0, z])
+                c1 = jnp.concatenate([c1, z])
+            return c0, c1
+        if self._datapath == "xla":
+            c0, c1 = stack_padded(items)
+            return dict(c0f=jnp.pad(c0, ext), c1f=jnp.pad(c1, ext), c1rep=c1,
+                        slots=diag_tab, **common), "dedup"
+        uniq, ct_slots = _dedup_by_identity(items)
+        if len(uniq) > b_loc:
+            # mostly-distinct batch: replicating the uniques would make every
+            # ct rank hoist MORE than its local share — keep per-element
+            # stacking sharded over the ct axis, rank-local hoist indices
+            c0u, c1u = stack_padded(items)
+            ct_tab = jnp.asarray(
+                (np.arange(b_pad) % b_loc).astype(np.int32))
+            return dict(c0u=jnp.pad(c0u, ext), c1u=jnp.pad(c1u, ext),
+                        c1rep=c1u, ct_slots=ct_tab, slots=diag_tab,
+                        **common), "element"
+        if plan.ct_slots is not None and tuple(ct_slots) == plan.ct_slots:
+            ct_tab = self._slot_tables["ct"]      # arena-owned hint table
+        else:
+            ct_tab = jnp.asarray(np.array(
+                list(ct_slots) + [0] * (b_pad - B), np.int32))
+        c0u = jnp.stack([it.c0 for it in uniq])
+        c1u = jnp.stack([it.c1 for it in uniq])
+        return dict(c0u=jnp.pad(c0u, ext), c1u=jnp.pad(c1u, ext), c1rep=c1u,
+                    ct_slots=ct_tab, slots=diag_tab, **common), "dedup"
 
     def _run_sharded(self, items) -> list:
         ctx, plan = self.ctx, self.plan
         tabs, _ = self._sharded
-        args = self._sharded_args(items)
-        fn = ctx._sharded_pipeline(tabs, plan.d_pad, plan.nbeta)
+        args, layout = self._sharded_args(items)
+        fn = ctx._sharded_pipeline(tabs, plan.d_pad, plan.nbeta,
+                                   self._datapath, plan.chunk, layout)
         out0, out1 = fn(args)
         lvl = plan.level
         return [self._finish(out0[b, :lvl], out1[b, :lvl], it.scale, ds)
@@ -544,12 +679,14 @@ class CompiledHLT:
         """Optimized HLO text of the sharded SPMD program for this batch —
         benchmarks feed it to distributed/hlo_analysis.collective_stats to
         MEASURE collective bytes against the plan's prediction."""
-        assert self.plan.schedule == "sharded", self.plan.schedule
+        assert self.plan.schedule.startswith("sharded"), self.plan.schedule
         self.ctx._check_generation(self._gen)
         tabs, _ = self._sharded
+        args, layout = self._sharded_args(items)
         fn = self.ctx._sharded_pipeline(tabs, self.plan.d_pad,
-                                        self.plan.nbeta)
-        return fn.lower(self._sharded_args(items)).compile().as_text()
+                                        self.plan.nbeta, self._datapath,
+                                        self.plan.chunk, layout)
+        return fn.lower(args).compile().as_text()
 
     def _run_batched_pallas(self, items) -> list:
         ctx, plan = self.ctx, self.plan
@@ -572,7 +709,17 @@ class CompiledHLT:
 
 @dataclasses.dataclass(frozen=True)
 class HEMMPlan:
-    """Inspectable compile summary for one HE matrix multiplication."""
+    """Inspectable compile summary for one HE matrix multiplication.
+
+    ``m``/``l``/``n`` are the plaintext matrix dimensions of Algorithm 2;
+    ``schedule`` is the common HLT schedule both steps compiled to;
+    ``level`` is the input ciphertext level (the program consumes ``depth``
+    = 3 levels: two HLT stages plus one Mult·Rescale); ``batched`` records
+    whether the steps compiled as slot-indexed batched launches.  ``step1``
+    and ``step2`` are the embedded :class:`HLTPlan` objects — the aggregate
+    properties below just sum them.
+    """
+
     m: int
     l: int
     n: int
@@ -585,15 +732,29 @@ class HEMMPlan:
 
     @property
     def rotations(self) -> int:
+        """Total real rotations per execution (both HLT stages)."""
         return self.step1.rotations + self.step2.rotations
 
     @property
     def operand_bytes(self) -> int:
+        """Deduped key/diagonal operand bytes across both stages."""
         return self.step1.operand_bytes + self.step2.operand_bytes
 
     @property
     def operand_bytes_naive(self) -> int:
+        """Key/diagonal bytes B-fold stacking would have allocated."""
         return self.step1.operand_bytes_naive + self.step2.operand_bytes_naive
+
+    @property
+    def hoist_bytes(self) -> int:
+        """Hoisting-product bytes after ct-slot dedup (Step 2 stores 2
+        unique products — one per input ciphertext — not 2·l)."""
+        return self.step1.hoist_bytes + self.step2.hoist_bytes
+
+    @property
+    def hoist_bytes_naive(self) -> int:
+        """Hoisting-product bytes of the per-element (no-dedup) layout."""
+        return self.step1.hoist_bytes_naive + self.step2.hoist_bytes_naive
 
     @property
     def collective_bytes(self) -> int:
@@ -627,9 +788,10 @@ class HEMMProgram:
         assert ctA.level == ctB.level == self.plan.level
         if self.plan.batched:
             ctA0, ctB0 = self._step1([ctA, ctB])
-            if self.plan.schedule == "sharded":
+            if self.plan.schedule.startswith("sharded"):
                 # the SPMD program hoists internally (limb-local, off the
-                # replicated inputs) — feed the Step-1 ciphertexts directly
+                # replicated inputs; the fused datapath hoists each unique
+                # ciphertext ONCE per rank) — feed the Step-1 cts directly
                 outs = self._step2([ctA0] * p.l + [ctB0] * p.l)
             else:
                 hstA, hstB = hoist_batched(eng, [ctA0, ctB0])
@@ -637,7 +799,8 @@ class HEMMProgram:
         else:
             s1a, s1b = self._step1
             ctA0, ctB0 = s1a(ctA), s1b(ctB)
-            if self.plan.schedule in ("baseline", "sharded"):
+            if self.plan.schedule == "baseline" or \
+                    self.plan.schedule.startswith("sharded"):
                 inA, inB = ctA0, ctB0
             else:   # hoist once, reuse across all l Step-2 HLTs per input
                 inA, inB = hoist(eng, ctA0), hoist(eng, ctB0)
@@ -663,12 +826,14 @@ def compile_hemm(ctx: HEContext, plan, *, level: Optional[int] = None,
     level = eng.params.L if level is None else level
     nbeta = len(eng.tools.digit_bases(level))
     if schedule is None:
+        # Step 2 dominates (2·l HLTs) and runs off 2 unique inputs — model
+        # the hoist-dedup term with the aliasing the program will create
         schedule = select_schedule(
             eng.params, nbeta=nbeta, headroom=ctx.vmem_headroom,
             n_model=ctx.n_model, n_ct=ctx.n_ct,
-            d=plan.ds_sigma.d, ctb=2 * plan.l)
+            d=plan.ds_sigma.d, ctb=2 * plan.l, n_uniq=2)
     if batched is None:
-        batched = schedule in ("pallas", "sharded")
+        batched = schedule in ("pallas", "sharded", "sharded_xla")
     batched = batched and schedule != "baseline"
     memo_key = ("hemm", _StrongKey(plan), schedule, level, rotation_chunk,
                 batched)
@@ -679,9 +844,14 @@ def compile_hemm(ctx: HEContext, plan, *, level: Optional[int] = None,
     step2_sets = list(plan.ds_eps) + list(plan.ds_omega)
     if batched:
         step1 = compile_hlt(ctx, [plan.ds_sigma, plan.ds_tau], level=level,
-                            schedule=schedule, rotation_chunk=rotation_chunk)
+                            schedule=schedule, rotation_chunk=rotation_chunk,
+                            ct_slots=(0, 1))
+        # Step 2 runs 2·l HLTs over TWO unique inputs ([A0]·l + [B0]·l):
+        # the ct_slots hint sizes the hoist-dedup plan numbers and (under
+        # sharded) pre-builds the arena slot tables for the common case.
         step2 = compile_hlt(ctx, step2_sets, level=level - 1,
-                            schedule=schedule, rotation_chunk=rotation_chunk)
+                            schedule=schedule, rotation_chunk=rotation_chunk,
+                            ct_slots=(0,) * plan.l + (1,) * plan.l)
         s1_plan, s2_plan = step1.plan, step2.plan
     else:
         c = lambda ds, lv: compile_hlt(ctx, ds, level=lv, schedule=schedule,

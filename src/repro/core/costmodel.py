@@ -21,18 +21,30 @@ MB = float(1 << 20)
 # Per-core TPU VMEM (the FPGA scratchpad analogue; pallas guide: ~16 MB/core).
 VMEM_BYTES = 16.0 * MB
 
-# Fraction of per-core VMEM the fused-HLT working set may claim.  A NAMED
-# budget knob (was a hard-coded 0.75 guess buried in two signatures): it is
-# the default of ``HEContext(vmem_headroom=...)`` and is threaded into every
-# HLTPlan, so tests/benchmarks can pin chunk choices (e.g. rotation_chunk=2)
-# explicitly and see which headroom produced a plan.  Replace with a
-# VMEM-measured value once the kernels run with interpret=False on hardware
-# (ROADMAP).
+#: Fraction of per-core VMEM the fused-HLT working set may claim
+#: (dimensionless, in (0, 1]; default 0.75 → 12 of 16 MB on v5e-class cores).
+#: Derivation: the Pallas runtime double-buffers every streamed BlockSpec
+#: operand (one tile in flight while the previous one computes), so the
+#: per-grid-step working set of ``pick_rotation_chunk``'s formula can
+#: transiently double for the streamed rows; 0.75 of VMEM for the steady-state
+#: set leaves the remaining quarter for that second in-flight tile plus the
+#: compiler's own spills.  It is a NAMED budget knob (was a hard-coded 0.75
+#: guess buried in two signatures): the default of
+#: ``HEContext(vmem_headroom=...)``, threaded into every HLTPlan, so
+#: tests/benchmarks can pin chunk choices (e.g. ``rotation_chunk=2``)
+#: explicitly and see which headroom produced a plan.  Replace with a
+#: VMEM-measured value once the kernels run with ``interpret=False`` on
+#: hardware (ROADMAP).
 VMEM_HEADROOM = 0.75
 
-# Collective bytes are more expensive than local HBM bytes by roughly the
-# HBM:ICI bandwidth ratio (~8x on current TPU generations); the schedule
-# selector charges the sharded schedule's BaseConv collective this factor.
+#: Cost multiplier for cross-device (ICI) bytes relative to local HBM bytes
+#: (dimensionless; used as HBM-equivalent-bytes per collective byte).
+#: Derivation: a v5e-class core streams ~0.8 TB/s from HBM but ~0.1 TB/s
+#: per ICI link direction, so moving one byte across the interconnect costs
+#: roughly the time of eight local bytes — ``select_schedule`` charges the
+#: sharded schedule's BaseConv psum at this rate when comparing per-device
+#: traffic.  The ratio is stable across recent TPU generations (v4/v5p are
+#: within ~2x); refine per-topology when a multi-host mesh is measured.
 ICI_PENALTY = 8.0
 
 # Representative per-HLT diagonal count when the caller doesn't know d yet
@@ -85,11 +97,26 @@ def hlt_operand_bytes(params: "HEParams", *, d: int,
     return d * (2 * nbeta + 1) * m * 4.0 * params.N
 
 
+def hlt_hoist_bytes(params: "HEParams", nbeta: int | None = None,
+                    n_limbs_ext: int | None = None) -> float:
+    """Bytes of ONE hoisting product (β digit expansions + raised c0/c1).
+
+    This is the unit the ct-slot dedup saves: the fused-sharded program
+    hoists it once per UNIQUE input ciphertext, the pre-dedup program once
+    per batch ELEMENT.
+    """
+    nbeta = params.beta if nbeta is None else nbeta
+    m = (params.L + 1 + params.k) if n_limbs_ext is None else n_limbs_ext
+    return (nbeta + 2) * m * 4.0 * params.N
+
+
 def select_schedule(params: "HEParams", nbeta: int | None = None,
                     vmem_bytes: float = VMEM_BYTES,
                     headroom: float | None = None, *,
                     n_model: int = 1, n_ct: int = 1,
-                    d: int | None = None, ctb: int | None = None) -> str:
+                    d: int | None = None, ctb: int | None = None,
+                    n_uniq: int | None = None,
+                    dedup_hoist: bool = True) -> str:
     """Cost-model schedule pick for compile_hlt/compile_hemm (schedule=None).
 
     Single device — the fused Pallas datapath needs its minimal per-grid-step
@@ -101,13 +128,31 @@ def select_schedule(params: "HEParams", nbeta: int | None = None,
 
     Multi-device mesh (``n_model``-way limb sharding × ``n_ct``-way
     ciphertext-batch sharding, from HEContext's mesh) — compare PER-DEVICE
-    traffic: the single-device schedule streams every rotation-loop operand
-    byte for every batch element through one device; the sharded SPMD
-    program splits them over the whole mesh (batch padded up to the ct axis)
-    but pays its BaseConv psum charged at the HBM:ICI bandwidth ratio
-    (``ICI_PENALTY``).  Large N / many limbs / big d / batches that span the
-    ct axis flip to "sharded"; one device — or work too small to amortize
-    the collective — keeps the single-device pick.
+    traffic.  With ``rot = hlt_operand_bytes(d)`` (keys+diagonals of one HLT),
+    ``hoist = hlt_hoist_bytes()`` (one hoisting product), ``B`` the batch,
+    ``B_pad`` the batch padded to the ct axis, ``U`` the unique-input count
+    (``n_uniq``; ``B`` when unknown) and ``coll = sharded_collective_bytes``,
+    the decision rule is the readable inequality::
+
+        rot·B_pad/(n_model·n_ct) + hoist·U/n_model + ICI_PENALTY·coll
+            <  rot·B + hoist·U                       ->  "sharded"
+
+    i.e. sharded wins when the rotation-loop bytes saved by spreading the
+    batch over the mesh exceed the ICI-penalized BaseConv psum.  Both sides
+    dedup the hoist to U products — the fused-sharded datapath by ct slot,
+    the single-device batched kernel by object identity — and each model
+    rank materializes only its ``1/n_model`` share of the hoisted rows
+    (same per-device convention as ``hlt_stage_costs``).
+    ``dedup_hoist=False`` models the pre-dedup program (``sharded_xla``),
+    which re-hoists every batch element: its left side pays
+    ``hoist·(B_pad/n_ct)/n_model`` instead of ``hoist·U/n_model``, so
+    heavily aliased batches (hemm Step-2's 2 unique inputs across 2·l
+    elements) can flip AWAY from sharded — the replicated-hoist penalty the
+    fusion removed.
+
+    Large N / many limbs / big d / batches that span the ct axis flip to
+    "sharded"; one device — or work too small to amortize the collective —
+    keeps the single-device pick.
     """
     nbeta = params.beta if nbeta is None else nbeta
     headroom = VMEM_HEADROOM if headroom is None else headroom
@@ -115,14 +160,20 @@ def select_schedule(params: "HEParams", nbeta: int | None = None,
     min_working_set = (nbeta + 4 + 2 * nbeta + 2) * row
     single = "pallas" if min_working_set <= headroom * vmem_bytes else "mo"
     n_model, n_ct = max(1, n_model), max(1, n_ct)
-    if n_model * n_ct <= 1:
+    if n_model * n_ct <= 1 or single != "pallas":
+        # "sharded" now drives the fused kernel per rank, and limb sharding
+        # splits the ROWS, not the per-row working set — if even chunk=1
+        # overflows VMEM on one device it overflows on every rank too
         return single
     d_eff = _DEFAULT_D if d is None else d
     ctb_eff = max(1, ctb or 1)
-    b_pad = -(-ctb_eff // n_ct) * n_ct          # zero-ct padded batch
+    uniq = ctb_eff if n_uniq is None else max(1, min(n_uniq, ctb_eff))
+    b_pad = -(-ctb_eff // n_ct) * n_ct          # slot/zero-ct padded batch
     operand = hlt_operand_bytes(params, d=d_eff, nbeta=nbeta)
-    single_dev = operand * ctb_eff
-    shard_dev = (operand * b_pad / (n_model * n_ct)
+    hoist = hlt_hoist_bytes(params, nbeta=nbeta)
+    single_dev = operand * ctb_eff + hoist * uniq
+    shard_hoist = hoist * (uniq if dedup_hoist else b_pad / n_ct) / n_model
+    shard_dev = (operand * b_pad / (n_model * n_ct) + shard_hoist
                  + ICI_PENALTY * sharded_collective_bytes(
                      params, n_model=n_model, ctb=b_pad // n_ct))
     return "sharded" if shard_dev < single_dev else single
@@ -130,7 +181,7 @@ def select_schedule(params: "HEParams", nbeta: int | None = None,
 
 def hlt_stage_costs(params: "HEParams", *, d: int, d_pad: int, nbeta: int,
                     chunk: int, n_limbs_ext: int, n_model: int = 1,
-                    ctb: int = 1) -> dict:
+                    ctb: int = 1, n_hoist: int | None = None) -> dict:
     """Per-stage byte / rotation / collective counts of ONE HLT at a given
     compile point (u32 word model) — attached to HLTPlan for inspection.
 
@@ -140,16 +191,25 @@ def hlt_stage_costs(params: "HEParams", *, d: int, d_pad: int, nbeta: int,
     traffic (only the merged ModDown+Rescale BaseConv moves data between
     ranks — ModUp reads the limb-replicated inputs, everything else is
     limb-local).
+
+    ``n_hoist`` is the number of hoisting products the execution actually
+    computes (the ct-slot dedup: unique input ciphertexts, not batch
+    elements; default = ``ctb``, the no-aliasing assumption).  The hoist
+    stage's per-ciphertext bytes are amortized by ``n_hoist / ctb`` — the
+    replicated-hoist term that the fused-sharded datapath drops.
     """
     row = 4 * params.N
     m = n_limbs_ext
     nm = max(1, n_model)
     m_loc = -(-m // nm)                  # per-device rows (padded shard)
+    nh = ctb if n_hoist is None else max(1, min(n_hoist, ctb))
     coll = sharded_collective_bytes(params, n_model=nm, ctb=ctb)
     return {
         "hoist": {                       # Decomp/ModUp digits + raised c0/c1
-            "bytes": (nbeta + 2) * m_loc * row, "rotations": 0,
-            "collective_bytes": 0},
+            "bytes": int(hlt_hoist_bytes(params, nbeta=nbeta,
+                                         n_limbs_ext=m_loc)) * nh
+            // max(1, ctb),
+            "rotations": 0, "collective_bytes": 0},
         "automorph": {                   # per-rotation perm-table gather
             "bytes": d_pad * (1 + nbeta) * m_loc * row, "rotations": d,
             "collective_bytes": 0},
@@ -168,6 +228,13 @@ def hlt_stage_costs(params: "HEParams", *, d: int, d_pad: int, nbeta: int,
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
+    """Paper §III data sizes, on-chip memory requirements and traffic.
+
+    ``word_model="paper"`` uses 54-bit FPGA words and reproduces the paper's
+    §III-B3 megabyte numbers; ``"tpu"`` uses 4-byte u32 words (the word-size
+    adaptation, DESIGN.md §3) for VMEM sizing and roofline math.
+    """
+
     params: HEParams
     word_model: str = "paper"     # "paper" | "tpu"
 
@@ -175,12 +242,14 @@ class CostModel:
 
     @property
     def bytes_per_coeff(self) -> float:
+        """Bytes per polynomial coefficient under the word model."""
         if self.word_model == "paper":
             return self.params.logq_paper / 8.0
         return 4.0
 
     @property
     def b_limb(self) -> float:
+        """Bytes of one RNS limb row (Eq. 16): N coefficients."""
         return self.params.N * self.bytes_per_coeff
 
     def b_ct(self, nlimbs: int | None = None) -> float:
@@ -253,6 +322,7 @@ class CostModel:
     # -- Table I ---------------------------------------------------------------
 
     def table1_counts(self, m: int, l: int, n: int) -> dict:
+        """Paper Table I: HE op counts per Algorithm-2 step for (m, l, n)."""
         d = diag_count_formulas(m, l, n)
         phi = d["sigma"] + d["tau"]
         zeta = l * (d["eps"] + d["omega"])
@@ -266,6 +336,7 @@ class CostModel:
 
 
 def report(params: HEParams, word_model: str = "paper") -> dict:
+    """Summarize the §III-B3 memory numbers for one parameter set (MB)."""
     cm = CostModel(params, word_model)
     return {
         "set": params.name,

@@ -1,6 +1,7 @@
 """Homomorphic Linear Transformation — the paper's bottleneck and contribution.
 
-Four schedules, mathematically equivalent (verified bit-exactly in tests):
+Five schedules, mathematically equivalent (verified bit-exactly in tests;
+DESIGN.md §2 tabulates what each one fuses):
 
 * ``baseline``  — Algorithm 1 / Fig. 2(A): coarse-grained rotation loop; every
   Rot runs a full KeySwitch (Decomp→ModUp→KeyIP→ModDown per rotation), and a
@@ -22,6 +23,13 @@ Four schedules, mathematically equivalent (verified bit-exactly in tests):
   rotation-chunk multiple with zero-diagonal identity entries, and the chunk
   defaults to the cost model's VMEM budget (core/costmodel.py
   pick_rotation_chunk). Bit-exact vs ``mo``/``hoisted``.
+
+* ``sharded``   — the multi-device shard_map program (core/hlt_dist.py):
+  limbs over the mesh ``model`` axis, the ciphertext batch over
+  ``pod``×``data``, each model rank driving its limb shard through the same
+  fused Pallas kernel with a ct-slot-deduped in-program hoist; the merged
+  ModDown+Rescale BaseConv psum is the only collective.  (``sharded_xla``
+  is its pre-fusion baseline, kept for benchmarks.)
 
 This module holds the HLT *math*: diagonal encoding, hoisting (single and
 batched across the ciphertext axis), the reference schedule implementations,
@@ -227,9 +235,13 @@ def _perm_table(eng: CkksEngine, zs) -> np.ndarray:
 
 
 # "sharded" is the multi-device shard_map schedule (core/hlt_dist.py): limbs
-# over the mesh `model` axis, the ciphertext batch over `pod`×`data`; same
-# math, bit-exact vs "mo" (tests/test_sharded.py).
-SCHEDULES = ("baseline", "hoisted", "mo", "pallas", "sharded")
+# over the mesh `model` axis, the ciphertext batch over `pod`×`data`, each
+# model rank driving its limb shard through the fused Pallas kernel with a
+# ct-slot-deduped in-program hoist; same math, bit-exact vs "mo"
+# (tests/test_sharded.py).  "sharded_xla" is its pre-fusion baseline (XLA
+# rotation scan, per-element hoist) kept for benchmarks — the cost model
+# never selects it.
+SCHEDULES = ("baseline", "hoisted", "mo", "pallas", "sharded", "sharded_xla")
 
 _DEPRECATION = ("%s is deprecated: build an HEContext and use "
                 "repro.core.compile.compile_hlt / compile_hemm (the "

@@ -21,13 +21,29 @@ Two entry points:
 * ``build_shard_tables`` + ``make_sharded_hlt_fn`` — the production
   ``schedule="sharded"`` program behind ``compile_hlt``/``compile_hemm``
   (core/compile.py): an explicit ``shard_map`` SPMD program with per-element
-  diagonal-set slots (the same deduped operand layout as the fused Pallas
-  schedule), ciphertext batch sharded over ``pod``×``data`` and the extended
-  limb axis sharded over ``model`` (padded when the device count does not
-  divide it). ModUp runs collective-free off the replicated inputs; the merged
-  ModDown+Rescale BaseConv is the ONLY collective — an exact ``psum`` with a
-  single contributor per limb row, so the program stays bit-exact against the
-  single-device MO schedule.
+  diagonal-set AND ciphertext slots (the same deduped operand layout as the
+  fused Pallas schedule), ciphertext batch sharded over ``pod``×``data`` and
+  the extended limb axis sharded over ``model`` (padded when the device count
+  does not divide it). ModUp runs collective-free off the replicated inputs;
+  the merged ModDown+Rescale BaseConv is the ONLY collective — an exact
+  ``psum`` with a single contributor per limb row, so the program stays
+  bit-exact against the single-device MO schedule.
+
+  Two datapaths share the shard_map skeleton (``datapath=``):
+
+  - ``"pallas"`` (the default) — each model rank drives its limb-row shard
+    through the fused Automorph→KeyIP→DiagIP Pallas kernel
+    (kernels/fused_hlt.py ``fused_hlt_indexed``), and the in-program hoist is
+    CT-SLOT DEDUPED: the rank hoists each UNIQUE input ciphertext once and
+    the kernel gathers digit rows by ``ct_slots[b]`` (hemm Step-2's
+    ``[A0]·l + [B0]·l`` batch hoists 2 products per rank, not 2·l).  This
+    stacks the paper's two wins — single-node datapath reuse and multi-unit
+    limb partitioning — in one program (DESIGN.md §4).
+  - ``"xla"`` — the PR-3 program kept verbatim as the fusion baseline:
+    limb-local stages lower through plain XLA (a lax.scan over rotations)
+    and every batch element re-hoists.  Exposed as
+    ``schedule="sharded_xla"`` for benchmarks (fused-vs-XLA wall times,
+    hoist bytes before/after dedup); the cost model never selects it.
 
 This module owns NO table/cache state: every builder here is pure, and the
 compiled path stores its tables in the owning ``HEContext`` operand arena
@@ -473,17 +489,48 @@ def _physical_axes(rules, logical: str) -> tuple:
     return tuple(a for a in axes if a in rules.mesh.shape)
 
 
+def build_slot_tables(diag_slots, ct_slots, b_pad: int) -> dict:
+    """Pad the batch-index -> operand-slot maps to the ct-axis multiple.
+
+    ``diag_slots``: per-element unique-DiagSet slot (always known at compile
+    time).  ``ct_slots``: per-element unique-ciphertext slot — the compile-time
+    ALIASING HINT for the in-program hoist dedup (hemm Step-2 passes
+    ``(0,)*l + (1,)*l``), or ``None`` when the aliasing is only known at call
+    time (core/compile.py then rebuilds the ct table per call from object
+    identity).  Padding elements point at slot 0; their outputs are computed
+    and dropped by the caller.
+
+    Pure — the result is stored in the owning HEContext's operand arena
+    (generation-guarded, dropped on re-keygen) like every other operand.
+    """
+    B = len(diag_slots)
+    assert b_pad >= B, (b_pad, B)
+    pad_d = list(diag_slots) + [0] * (b_pad - B)
+    out = dict(diag=jnp.asarray(np.array(pad_d, np.int32)))
+    if ct_slots is not None:
+        assert len(ct_slots) == B, (len(ct_slots), B)
+        pad_c = list(ct_slots) + [0] * (b_pad - B)
+        out["ct"] = jnp.asarray(np.array(pad_c, np.int32))
+    else:
+        out["ct"] = None
+    return out
+
+
 def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
-                        fp_dtype=jnp.float64, unroll: int = 1):
+                        fp_dtype=jnp.float64, unroll: int = 1,
+                        datapath: str = "pallas", chunk: Optional[int] = None,
+                        hoist_layout: str = "dedup"):
     """Build the ``schedule="sharded"`` SPMD program for one compile point.
 
-    Returns ``fn(args) -> (acc0, acc1)`` where ``args`` is a dict:
+    Returns ``fn(args) -> (acc0, acc1)``.  With ``datapath="pallas"`` (the
+    production default) ``args`` is a dict over H hoist inputs:
 
     ======== =========================== ====================================
     key      shape                       sharding
     ======== =========================== ====================================
-    c0f,c1f  (B, M_pad, N) u32           ct_batch x limbs (zero-extended rows)
-    c1rep    (B, level+1, N) u32         ct_batch only (hoist input, limb-rep)
+    c0u,c1u  (H, M_pad, N) u32           limbs (hoist inputs, zero-ext. rows)
+    c1rep    (H, level+1, N) u32         limb-replicated (hoist input)
+    ct_slots (B,) i32                    ct_batch (batch elem -> hoist slot)
     slots    (B,) i32                    ct_batch (batch elem -> diag slot)
     u        (S, d_pad, M_pad, N) u32    limbs (mont diagonals per slot)
     rk0,rk1  (S, d_pad, b, M_pad, N) u32 limbs (mont rotation keys)
@@ -492,9 +539,36 @@ def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
     tab      shard_operand_arrays(tabs)  limbs (per-row constant tables)
     ======== =========================== ====================================
 
-    B must be a multiple of the ct-axis device count (callers pad with zero
-    ciphertexts — core/compile.py). Outputs are (B, M_pad, N) x2 after the
-    merged ModDown+Rescale; real output rows are 0..level-1 (caller slices).
+    Each model rank hoists its hoist inputs and then drives its limb-row
+    shard through the fused Automorph→KeyIP→DiagIP Pallas kernel
+    (``kernels/fused_hlt.py fused_hlt_indexed``) with the scalar-prefetch
+    slot vectors routing each batch element's DMA to its hoisting product /
+    diagonal set.  ``chunk`` is the kernel's per-rank rotation chunk (VMEM
+    budget pick, must divide ``d_pad``; defaults to ``d_pad``).
+
+    ``hoist_layout`` picks how hoist inputs are laid out across the ct axis
+    (the caller — core/compile.py — chooses whichever hoists FEWER
+    ciphertexts per rank for the call's aliasing pattern):
+
+    - ``"dedup"`` — H = unique ciphertexts, REPLICATED over the ct axis;
+      ``ct_slots`` holds global unique-ct ids.  Every rank hoists each
+      unique input once (Step-2's ``[A0]·l + [B0]·l`` batch: 2 hoists per
+      rank, not 2·l), at the cost of holding all H on every ct rank.
+    - ``"element"`` — H = B_pad per-element inputs SHARDED over the ct axis
+      (like the xla baseline); ``ct_slots`` holds rank-LOCAL indices
+      (``arange(B_pad) % B_loc``).  Each rank hoists only its local batch
+      elements — better than replicating when the batch is mostly distinct.
+
+    With ``datapath="xla"`` (``schedule="sharded_xla"``, the fusion baseline
+    kept for benchmarks) ``args`` instead carries per-ELEMENT tensors
+    ``c0f,c1f (B, M_pad, N)`` / ``c1rep (B, level+1, N)`` sharded over
+    ``ct_batch``, every element re-hoists, and the rotation loop lowers
+    through plain XLA (lax.scan).
+
+    B must be a multiple of the ct-axis device count (core/compile.py pads:
+    zero ciphertexts on the xla path, slot-0 aliases on the pallas path).
+    Outputs are (B, M_pad, N) x2 after the merged ModDown+Rescale; real
+    output rows are 0..level-1 (caller slices).
 
     ModUp is collective-free: the hoist reads the limb-REPLICATED ``c1rep``
     and every model rank materializes only its local digit rows. The merged
@@ -506,13 +580,14 @@ def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    p = tabs.params
-    level, nq = tabs.level, tabs.level + 1
+    assert datapath in ("pallas", "xla"), datapath
     mesh = rules.mesh
     limb_axes = _physical_axes(rules, "limbs") if tabs.n_model > 1 else ()
     ct_axes = _physical_axes(rules, "ct_batch")
     limb = limb_axes if limb_axes else None
     ct = ct_axes if ct_axes else None
+    kchunk = d_pad if chunk is None else max(1, min(int(chunk), d_pad))
+    assert d_pad % kchunk == 0, (d_pad, kchunk)
 
     q_main = jnp.asarray(tabs.q_main)
     qneg_main = jnp.asarray(tabs.qneg_main)
@@ -535,12 +610,10 @@ def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
         corr = mm.montmul(v[:, None, :], D_loc, q, qn)
         return mm.montsub(acc, corr, q)
 
-    def body(a):
-        t = a["tab"]
-        q, qn = t["q32"], t["qneg"]
-        c1rep = a["c1rep"]
-
-        # ---- hoist: Decomp + ModUp, collective-free off replicated c1 ----
+    def hoist_local(t, c1rep, c1f, q, qn):
+        """Decomp + ModUp of each leading-axis element, collective-free off
+        the limb-replicated ``c1rep``; own rows come from the rank's ``c1f``
+        shard.  Returns digits (·, β', rows_loc, N)."""
         digs = []
         for j in range(len(dig_sl)):
             s_, e_ = dig_sl[j]
@@ -550,13 +623,53 @@ def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
             y = mm.montmul(coeff, dig_hat[j], q_main[s_:e_], qneg_main[s_:e_])
             ext = baseconv_rows(y, t[f"W{j}"], t[f"D{j}"], dig_invd[j], q, qn)
             ext_eval = ntt.ntt_mont(ext, t["psi_m"], q, qn)
-            digs.append(jnp.where(t[f"mask{j}"].astype(bool), a["c1f"],
-                                  ext_eval))
-        digits = jnp.stack(digs, axis=1)            # (B, beta', rows_loc, N)
+            digs.append(jnp.where(t[f"mask{j}"].astype(bool), c1f, ext_eval))
+        return jnp.stack(digs, axis=1)
+
+    def make_mod_down(t, q, qn):
+        """Merged ModDown+Rescale: the ONE collective (BaseConv psum)."""
+        def mod_down(acc):
+            xp = ntt.intt_mont(acc, t["psii_m"], t["ninv_m"], q, qn)
+            y = mm.montmul(xp, t["md_hat_inv"], q, qn)   # zero off drop rows
+            # scatter local drop rows to their P_ext position, then psum: one
+            # contributor per row -> the sum is exact (collective volume is
+            # the paper's BaseConv traffic, nothing else crosses ranks)
+            part = jnp.sum(t["sel_drop"][None, :, :, None] * y[:, None],
+                           axis=2)                       # (B, |drop|, N)
+            y_drop = (jax.lax.psum(part, limb_axes) if limb_axes else part)
+            conv = baseconv_rows(y_drop, t["md_W"], t["md_D"], md_invd, q, qn)
+            conv_eval = ntt.ntt_mont(conv, t["psi_m"], q, qn)
+            diff = mm.montsub(acc, conv_eval, q)
+            return mm.montmul(diff, t["md_p_inv"], q, qn)
+        return mod_down
+
+    def body_pallas(a):
+        """Fused datapath: deduped hoist + per-rank fused_hlt_indexed."""
+        from repro.kernels import ops
+        t = a["tab"]
+        q, qn = t["q32"], t["qneg"]
+        # ---- hoist H UNIQUE cts (ct-slot dedup), limb-local rows ----
+        digits = hoist_local(t, a["c1rep"], a["c1u"], q, qn)
+        c0e = mm.montmul(a["c0u"], t["p_raise_m"], q, qn)
+        c1e = mm.montmul(a["c1u"], t["p_raise_m"], q, qn)
+        # ---- fused rotation loop on this rank's limb-row shard ----
+        acc0, acc1 = ops.fused_hlt_indexed(
+            digits, c0e, c1e, a["u"], a["rk0"], a["rk1"], a["perms"],
+            a["is_id"], a["ct_slots"], a["slots"], q, qn, chunk=kchunk)
+        mod_down = make_mod_down(t, q, qn)
+        return mod_down(acc0), mod_down(acc1)
+
+    def body_xla(a):
+        """Fusion baseline: per-element hoist + XLA-lowered rotation scan."""
+        t = a["tab"]
+        q, qn = t["q32"], t["qneg"]
+
+        # ---- hoist: Decomp + ModUp, once per batch ELEMENT (no dedup) ----
+        digits = hoist_local(t, a["c1rep"], a["c1f"], q, qn)
         c0e = mm.montmul(a["c0f"], t["p_raise_m"], q, qn)
         c1e = mm.montmul(a["c1f"], t["p_raise_m"], q, qn)
 
-        # ---- rotation loop (fused Automorph->KeyIP->DiagIP, limb-local) ----
+        # ---- rotation loop (Automorph->KeyIP->DiagIP, limb-local) ----
         slots = a["slots"]
         perms, is_id = a["perms"], a["is_id"]
         u, rk0, rk1 = a["u"], a["rk0"], a["rk1"]
@@ -586,34 +699,31 @@ def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
         z = jnp.zeros(c0e.shape, jnp.uint32)
         (acc0, acc1), _ = jax.lax.scan(rot_body, (z, z),
                                        jnp.arange(d_pad), unroll=unroll)
-
-        # ---- merged ModDown+Rescale: the ONE collective (BaseConv psum) ----
-        def mod_down(acc):
-            xp = ntt.intt_mont(acc, t["psii_m"], t["ninv_m"], q, qn)
-            y = mm.montmul(xp, t["md_hat_inv"], q, qn)   # zero off drop rows
-            # scatter local drop rows to their P_ext position, then psum: one
-            # contributor per row -> the sum is exact (collective volume is
-            # the paper's BaseConv traffic, nothing else crosses ranks)
-            part = jnp.sum(t["sel_drop"][None, :, :, None] * y[:, None],
-                           axis=2)                       # (B, |drop|, N)
-            y_drop = (jax.lax.psum(part, limb_axes) if limb_axes else part)
-            conv = baseconv_rows(y_drop, t["md_W"], t["md_D"], md_invd, q, qn)
-            conv_eval = ntt.ntt_mont(conv, t["psi_m"], q, qn)
-            diff = mm.montsub(acc, conv_eval, q)
-            return mm.montmul(diff, t["md_p_inv"], q, qn)
-
+        mod_down = make_mod_down(t, q, qn)
         return mod_down(acc0), mod_down(acc1)
 
-    in_specs = (dict(
-        c0f=P(ct, limb, None), c1f=P(ct, limb, None),
-        c1rep=P(ct, None, None), slots=P(ct),
+    tab_specs = {k: (P(None, limb) if k == "sel_drop" else P(limb, None))
+                 for k in _tab_keys(tabs)}
+    op_specs = dict(
         u=P(None, None, limb, None),
         rk0=P(None, None, None, limb, None),
         rk1=P(None, None, None, limb, None),
-        perms=P(None, None, None), is_id=P(None, None, None),
-        tab={k: (P(None, limb) if k == "sel_drop" else P(limb, None))
-             for k in _tab_keys(tabs)},
-    ),)
+        perms=P(None, None, None), is_id=P(None, None, None))
+    if datapath == "pallas":
+        assert hoist_layout in ("dedup", "element"), hoist_layout
+        body = body_pallas
+        ct_h = None if hoist_layout == "dedup" else ct
+        in_specs = (dict(
+            c0u=P(ct_h, limb, None), c1u=P(ct_h, limb, None),
+            c1rep=P(ct_h, None, None),
+            ct_slots=P(ct), slots=P(ct),
+            tab=tab_specs, **op_specs),)
+    else:
+        body = body_xla
+        in_specs = (dict(
+            c0f=P(ct, limb, None), c1f=P(ct, limb, None),
+            c1rep=P(ct, None, None), slots=P(ct),
+            tab=tab_specs, **op_specs),)
     out_specs = (P(ct, limb, None),) * 2
     if mesh is None:
         return body

@@ -67,7 +67,8 @@ class SecureMatmulEngine:
                 "programs explicitly via repro.core.compile.",
                 DeprecationWarning, stacklevel=3)
         if self.batched is None:
-            self.batched = self.schedule in ("pallas", "sharded")
+            self.batched = (self.schedule == "pallas"
+                            or self.schedule.startswith("sharded"))
 
     @property
     def _keys(self) -> Optional[Keys]:
@@ -143,9 +144,10 @@ class SecureMatmulEngine:
             level=level, schedule=sched, rotation_chunk=chunk)
         outs = step1([A_tiles[i][k] for i, k in ik]
                      + [B_tiles[k][j] for k, j in kj])
-        if sched == "sharded":
-            # the SPMD program hoists internally; Step 2 consumes the
-            # Step-1 ciphertexts directly (tile axis stays mesh-sharded)
+        if sched is not None and sched.startswith("sharded"):
+            # the SPMD program hoists internally (fused datapath: once per
+            # unique ciphertext per rank); Step 2 consumes the Step-1
+            # ciphertexts directly (tile axis stays mesh-sharded)
             hst = outs
         else:
             # Decomp/ModUp across the whole tile set as ONE vmapped pipeline

@@ -27,7 +27,9 @@ class ServeConfig:
     # string-threaded override.  he_mesh (a jax Mesh with pod/data/model
     # axes) enables the distributed schedule: ciphertext tiles shard over
     # pod×data, RNS limbs over model (schedule="sharded" — cost-model
-    # selected, or forced via he_schedule).
+    # selected, or forced via he_schedule — which drives the fused Pallas
+    # kernel inside every model rank with a ct-slot-deduped in-program
+    # hoist; "sharded_xla" forces the pre-fusion baseline for benchmarks).
     he_schedule: Optional[str] = None
     he_tile: int = 8
     he_rotation_chunk: Optional[int] = None   # None = cost-model VMEM pick

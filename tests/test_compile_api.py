@@ -126,6 +126,45 @@ def test_hemm_step2_stores_two_hoist_slots(setup):
     assert ct_slots == [0] * plan.l + [1] * plan.l
 
 
+def test_sharded_step2_hoist_slot_accounting(setup):
+    """Under schedule="sharded" hemm Step-2 stores ONE hoisting product per
+    unique input ciphertext (2, not 2·l): the ct_slots hint is canonical on
+    the plan, hoist bytes reflect the dedup, the slot tables live in the
+    arena, and the packed SPMD args stack exactly 2 unique ciphertexts.
+    The pre-fusion baseline ("sharded_xla") re-hoists per element (2·l)."""
+    import numpy as np
+    s = setup
+    plan = s["plan"]
+    ctx = HEContext(s["ctx"].eng, s["ctx"].keys)    # fresh arena to inspect
+    prog = compile_hemm(ctx, plan, schedule="sharded", rotation_chunk=2)
+    s2 = prog._step2.plan
+    assert s2.batch == 2 * plan.l
+    assert s2.ct_slots == (0,) * plan.l + (1,) * plan.l
+    assert s2.n_ct_slots == 2
+    eng = ctx.eng
+    m_ext = len(eng.tools.digit_bases(s2.level)[0][2])
+    h_unit = (s2.nbeta + 2) * m_ext * 4 * eng.params.N
+    assert s2.hoist_bytes == 2 * h_unit             # 2 unique products...
+    assert s2.hoist_bytes_naive == 2 * plan.l * h_unit   # ...was 2·l
+    assert prog.plan.hoist_bytes < prog.plan.hoist_bytes_naive
+    kinds = {k[0] for k in ctx.arena._entries}
+    assert "sharded_slot_tables" in kinds           # arena-owned slot tables
+    # the packed shard_map args stack only the UNIQUE ciphertexts and route
+    # batch elements through the ct-slot vector
+    ctA0, ctB0 = prog._step1([s["ctA"], s["ctB"]])
+    args, layout = prog._step2._sharded_args([ctA0] * plan.l + [ctB0] * plan.l)
+    assert layout == "dedup"
+    assert args["c0u"].shape[0] == args["c1rep"].shape[0] == 2
+    np.testing.assert_array_equal(
+        np.asarray(args["ct_slots"]), [0] * plan.l + [1] * plan.l)
+    # the XLA baseline keeps the per-element layout: no dedup, 2·l hoists
+    progx = compile_hemm(ctx, plan, schedule="sharded_xla")
+    s2x = progx._step2.plan
+    assert s2x.hoist_bytes == s2x.hoist_bytes_naive == 2 * plan.l * h_unit
+    argsx, _ = progx._step2._sharded_args([ctA0] * plan.l + [ctB0] * plan.l)
+    assert argsx["c1rep"].shape[0] == 2 * plan.l
+
+
 def test_hoist_batched_bit_exact_vs_loop(setup):
     s = setup
     eng = s["ctx"].eng

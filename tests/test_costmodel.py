@@ -118,6 +118,33 @@ def test_vmem_headroom_is_the_named_default():
                 == select_schedule(p, headroom=VMEM_HEADROOM))
 
 
+def test_select_schedule_hoist_dedup_retune():
+    """The fused-sharded datapath dedupes the in-program hoist by ct slot;
+    modeling the pre-dedup program (dedup_hoist=False, schedule="sharded_xla")
+    re-charges the hoist per batch ELEMENT, which flips heavily aliased
+    batches (hemm Step-2: 2 unique inputs across many elements) away from
+    sharded — the replicated-hoist penalty the fusion removed."""
+    kw = dict(n_model=2, n_ct=1, d=3, ctb=64, n_uniq=2)
+    assert select_schedule(SET_B, **kw) == "sharded"
+    assert select_schedule(SET_B, **kw, dedup_hoist=False) == "pallas"
+    # without aliasing (n_uniq=ctb) the hoist term is symmetric on a pure
+    # limb mesh and the two models agree
+    assert (select_schedule(SET_B, n_model=4, d=127, ctb=1)
+            == select_schedule(SET_B, n_model=4, d=127, ctb=1,
+                               dedup_hoist=False) == "sharded")
+
+
+def test_stage_costs_hoist_dedup_term():
+    """n_hoist (unique hoisting products) amortizes ONLY the hoist stage's
+    per-ciphertext bytes; every other stage is per-element and unchanged."""
+    kw = dict(d=31, d_pad=32, nbeta=2, chunk=4, n_limbs_ext=24, n_model=4)
+    full = hlt_stage_costs(SET_B, **kw, ctb=6)
+    dedup = hlt_stage_costs(SET_B, **kw, ctb=6, n_hoist=2)
+    assert dedup["hoist"]["bytes"] == full["hoist"]["bytes"] // 3
+    for stage in ("automorph", "keyip", "diagip", "moddown"):
+        assert dedup[stage] == full[stage]
+
+
 def test_stage_costs_collective_terms():
     """Per-stage collective bytes: ModDown is the ONLY stage that moves data
     across ranks, and per-device stream bytes shrink with the limb shard."""

@@ -12,7 +12,11 @@ single-device MO schedule:
   including a batch size that does not divide the ciphertext axis (batch
   padding with zero ciphertexts);
 * for the block MM over ciphertext tiles (SecureMatmulEngine), where tiles
-  shard over ``data`` and limbs over ``model`` — the 2-D parallel block MM.
+  shard over ``data`` and limbs over ``model`` — the 2-D parallel block MM;
+* for BOTH datapaths: ``schedule="sharded"`` drives the fused Pallas kernel
+  (``fused_hlt_indexed``) inside every model rank with a ct-slot-deduped
+  in-program hoist, ``schedule="sharded_xla"`` is the pre-fusion scan
+  baseline — same math, same outputs, different lowering.
 """
 import json
 import os
@@ -145,6 +149,102 @@ def test_sharded_hemm_2d_mesh_bit_exact_and_batch_padding():
     assert r["ok"] and r["okb"], r
     assert r["err"] < 0.05
     assert r["coll"] > 0 and r["n_ct"] == 2 and r["n_model"] == 2
+
+
+def test_sharded_fused_datapath_pallas_call_and_xla_parity():
+    """The fused-sharded program drives fused_hlt_indexed inside each model
+    rank (the Pallas call is IN the shard_map body, so every rank executes
+    it on its limb shard) with a ct-slot-deduped in-program hoist; the
+    "sharded_xla" baseline contains no Pallas call, re-hoists per element,
+    and both are bit-exact vs each other and vs single-device MO."""
+    code = textwrap.dedent("""
+        import json
+        import numpy as np
+        import repro
+        import jax
+        from repro.core.ckks import CkksEngine
+        from repro.core.compile import HEContext, compile_hemm, compile_hlt
+        from repro.core.hemm import plan_hemm, encrypt_matrix
+        from repro.core.params import toy_params
+        from repro.launch.mesh import make_mesh_for
+
+        params = toy_params(logN=6, L=4, k=3, beta=2, scale_bits=26)
+        mesh = make_mesh_for(4, model_parallel=2)      # data=2 x model=2
+        rng = np.random.default_rng(5)
+        ctx = HEContext(CkksEngine(params), mesh=mesh)
+        plan = plan_hemm(ctx.eng, 4, 3, 5)
+        ctx.keygen(rng, rot_steps=plan.rot_steps)
+        ctA = encrypt_matrix(ctx.eng, ctx.keys,
+                             rng.uniform(-1, 1, (4, 3)), rng)
+        ctB = encrypt_matrix(ctx.eng, ctx.keys,
+                             rng.uniform(-1, 1, (4, 3)), rng)
+        # aliased batch (the hemm Step-2 pattern): 3 elements, 2 unique cts
+        items = [ctA, ctB, ctA]
+        sets = [plan.ds_sigma, plan.ds_tau, plan.ds_sigma]
+        fused = compile_hlt(ctx, sets, level=ctA.level, schedule="sharded",
+                            rotation_chunk=2, ct_slots=(0, 1, 0))
+        xla = compile_hlt(ctx, sets, level=ctA.level, schedule="sharded_xla")
+        of, ox = fused(items), xla(items)
+        ok = True
+        for it, ds, a, b in zip(items, sets, of, ox):
+            r = compile_hlt(ctx, ds, level=it.level, schedule="mo")(it)
+            for o in (a, b):
+                ok &= np.array_equal(np.asarray(r.c0), np.asarray(o.c0))
+                ok &= np.array_equal(np.asarray(r.c1), np.asarray(o.c1))
+        # the Pallas kernel is inside the shard_map body (per-rank), the
+        # XLA baseline has none
+        def jaxpr_of(run):
+            tabs, _ = run._sharded
+            args, layout = run._sharded_args(items)
+            fn = ctx._sharded_pipeline(tabs, run.plan.d_pad, run.plan.nbeta,
+                                       run._datapath, run.plan.chunk, layout)
+            return str(jax.make_jaxpr(fn)(args))
+        jf, jx = jaxpr_of(fused), jaxpr_of(xla)
+        # packed args: fused stacks the 2 UNIQUE cts; xla packs per element
+        # (batch 3 padded to the 2-way ct axis with a zero ciphertext)
+        af, layf = fused._sharded_args(items)
+        ax, _ = xla._sharded_args(items)
+        # mostly-DISTINCT batch: replicating uniques over the ct axis would
+        # cost more hoists per rank than the local share -> element layout,
+        # still bit-exact vs MO
+        dis = [encrypt_matrix(ctx.eng, ctx.keys,
+                              rng.uniform(-1, 1, (4, 3)), rng)
+               for _ in range(4)]
+        rund = compile_hlt(ctx, [plan.ds_sigma] * 4, level=ctA.level,
+                           schedule="sharded", rotation_chunk=2)
+        od = rund(dis)
+        okd = True
+        mo1 = compile_hlt(ctx, plan.ds_sigma, level=ctA.level, schedule="mo")
+        for it, o in zip(dis, od):
+            r = mo1(it)
+            okd &= np.array_equal(np.asarray(r.c0), np.asarray(o.c0))
+            okd &= np.array_equal(np.asarray(r.c1), np.asarray(o.c1))
+        ad, layd = rund._sharded_args(dis)
+        print(json.dumps(dict(
+            ok=ok, okd=okd,
+            fused_has_pallas="pallas_call" in jf,
+            xla_has_pallas="pallas_call" in jx,
+            fused_in_shmap=("shard_map" in jf or "shmap" in jf),
+            n_uniq_packed=int(af["c1rep"].shape[0]), layout_aliased=layf,
+            distinct_packed=int(ad["c1rep"].shape[0]), layout_distinct=layd,
+            distinct_slots=np.asarray(ad["ct_slots"]).tolist(),
+            xla_packed=int(ax["c1rep"].shape[0]),
+            hoist=fused.plan.hoist_bytes,
+            hoist_naive=fused.plan.hoist_bytes_naive,
+            hoist_xla=xla.plan.hoist_bytes)))
+    """)
+    r = _run(code)
+    assert r["ok"], r
+    assert r["okd"], r                          # element layout bit-exact
+    assert r["fused_has_pallas"] and not r["xla_has_pallas"]
+    assert r["fused_in_shmap"]                  # per-rank, not a global call
+    assert r["n_uniq_packed"] == 2              # ct-slot dedup: 2 unique cts
+    assert r["layout_aliased"] == "dedup"
+    assert r["layout_distinct"] == "element"    # 4 uniques > 2-per-rank share
+    assert r["distinct_packed"] == 4            # per-element, ct-sharded
+    assert r["distinct_slots"] == [0, 1, 0, 1]  # rank-local hoist indices
+    assert r["xla_packed"] == 4                 # per-element + batch padding
+    assert r["hoist"] < r["hoist_naive"] == r["hoist_xla"]
 
 
 def _blockmm_code(m, l, n):
