@@ -16,14 +16,18 @@ quantity: counts, MB, speedups, ...). Sections:
              (subprocesses set XLA_FLAGS): fused vs "sharded_xla" wall
              times, measured-vs-predicted collective bytes, and in-program
              hoist bytes before/after the ct-slot dedup
+  serve    — multi-tenant secure serving: cross-request batched (one launch
+             per decode step) vs per-request secure-layer calls, operand
+             bytes, shared-prompt hoist dedup (BENCH_serve.json)
   kernels  — Pallas kernel calls (interpret mode) vs jnp oracle
   roofline — §Roofline table from results/dryrun/*.json (if present)
 
 Flags:
   --json [PATH]  also write machine-readable results: hemm/fig6 data to PATH
                  (default BENCH_hemm.json) plus one sibling file per extra
-                 section (BENCH_blockmm.json, BENCH_dist.json) so CI can
-                 track each perf trajectory separately
+                 section (BENCH_blockmm.json, BENCH_dist.json,
+                 BENCH_serve.json) so CI can track each perf trajectory
+                 separately
   --smoke        minimal reps / sizes — CI smoke mode
 
 Timing is min-over-reps (after a warmup/compile call): jax's eager dispatch
@@ -45,7 +49,7 @@ import numpy as np
 RESULTS: dict = {}
 
 # sections that get their own BENCH_<name>.json next to the --json path
-SPLIT_SECTIONS = ("blockmm", "dist")
+SPLIT_SECTIONS = ("blockmm", "dist", "serve")
 
 
 def _t(fn, *args, reps=3, **kw):
@@ -333,6 +337,74 @@ def bench_dist(smoke: bool = False):
                        per_count}
 
 
+def bench_serve(smoke: bool = False):
+    """Multi-tenant secure serving (serve/sessions.py + serve/he_batcher.py):
+    R in-flight requests' secure-layer calls per decode step, cross-request
+    batched (ONE BlockMMProgram launch per step) vs per-request launches
+    (the pre-subsystem behavior), plus the arena-deduped operand bytes the
+    one-launch program streams vs the per-request naive bound and the
+    hoisting products skipped by shared-prompt aliasing."""
+    from repro.core.params import toy_params
+    from repro.serve.he_batcher import CrossRequestHEBatcher, SecureCall
+    from repro.serve.sessions import HEProgramCache, SessionPool
+
+    reps = 1 if smoke else 3
+    R = 3 if smoke else 6               # in-flight requests per decode step
+    d_in, d_out = 8, 4
+    rng = np.random.default_rng(0)
+    pool = SessionPool(toy_params(logN=6, L=4, k=3, beta=2), tile=4)
+    pool.attach_weights({0: rng.standard_normal((d_in, d_out)) * 0.4})
+    # two of the R requests share a prompt -> identical activation rows
+    xs = [rng.standard_normal(d_in) for _ in range(R - 1)]
+    xs.append(xs[0].copy())
+
+    def one_step(bat):
+        for rid, x in enumerate(xs):
+            bat.submit(SecureCall(rid, 0, x))
+        return bat.flush()
+
+    bat = CrossRequestHEBatcher(pool, rng=np.random.default_rng(1))
+    us_bat, _ = _t(lambda: one_step(bat), reps=reps)
+    per = CrossRequestHEBatcher(pool, cache=HEProgramCache(),
+                                rng=np.random.default_rng(1),
+                                batch_requests=False)
+    us_per, _ = _t(lambda: one_step(per), reps=reps)
+
+    s_bat, s_per = bat.steps[-1], per.steps[-1]
+    row(f"serve/{R}req/batched", us_bat,
+        f"launches_per_step={s_bat.program_launches};"
+        f"hlt_launches={s_bat.hlt_launches}")
+    row(f"serve/{R}req/per_request", us_per,
+        f"launches_per_step={s_per.program_launches};"
+        f"batched_speedup={us_per / us_bat:.2f}x")
+    # operand bytes of the one-launch program (arena-deduped vs naive) and
+    # the hoist bytes the shared-prompt aliasing saved this step
+    sess = pool.session("default", np.random.default_rng(2))
+    prog = bat.cache.get(sess, sess.engine._plan, (R, 2, 1),
+                         level=pool.params.L, schedule=sess.engine.schedule)
+    bp = prog.plan
+    row(f"serve/{R}req/operand_bytes", None,
+        f"dedup_B={bp.operand_bytes};naive_B={bp.operand_bytes_naive};"
+        f"x={bp.operand_bytes_naive / max(1, bp.operand_bytes):.1f}")
+    row(f"serve/{R}req/hoist_dedup", None,
+        f"saved_B={s_bat.amortization['hoist_dedup_saved_bytes']};"
+        f"uniq_tiles={s_bat.n_uniq_tiles}/{s_bat.n_tiles}")
+    RESULTS["serve"] = {
+        "requests_per_step": R,
+        "batched_us": round(us_bat, 1),
+        "per_request_us": round(us_per, 1),
+        "batched_speedup_x": round(us_per / us_bat, 2),
+        "launches_per_step": {"batched": s_bat.program_launches,
+                              "per_request": s_per.program_launches},
+        "operand_bytes": {"dedup": bp.operand_bytes,
+                          "naive": bp.operand_bytes_naive},
+        "hoist_dedup_saved_bytes":
+            s_bat.amortization["hoist_dedup_saved_bytes"],
+        "program_cache": bat.cache.report(),
+        "session_pool": pool.report(),
+    }
+
+
 def bench_kernels():
     import jax.numpy as jnp
     from repro.core.params import toy_params, get_context
@@ -388,7 +460,8 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = [bench_table1, bench_table2_costmodel, bench_fig6_schedules,
-                bench_blockmm, bench_dist, bench_kernels, bench_roofline]
+                bench_blockmm, bench_dist, bench_serve, bench_kernels,
+                bench_roofline]
     for fn in sections:
         if args.section and args.section not in fn.__name__:
             continue

@@ -2,8 +2,17 @@
 requests into free slots, decode all active slots per step.
 
     PYTHONPATH=src python examples/serve_lm.py --requests 6 --max-new 12
+
+With ``--secure`` the model's first layer is flagged secure and served
+through the multi-tenant HE subsystem (DESIGN.md §5): requests alternate
+between two tenants ("acme", "globex"), each with its OWN CKKS keyset over
+a shared engine, and every decode step's secure-layer calls fold into one
+program launch per tenant via the cross-request batcher.
+
+    PYTHONPATH=src python examples/serve_lm.py --secure --requests 4
 """
 import argparse
+import dataclasses
 
 import numpy as np
 import jax
@@ -11,7 +20,10 @@ import jax
 import repro  # noqa: F401
 from repro.configs import get_smoke_config
 from repro.models import transformer as tf
-from repro.serve.engine import ContinuousBatcher, ServeConfig
+from repro.serve.engine import (ContinuousBatcher, ServeConfig,
+                                build_secure_serving)
+
+TENANTS = ("acme", "globex")
 
 
 def main():
@@ -19,17 +31,32 @@ def main():
     ap.add_argument("--arch", default="qwen2-7b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--secure", action="store_true",
+                    help="serve layer 0 under HE, two tenants")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    batcher = ContinuousBatcher(cfg, ServeConfig(max_batch=4, max_len=96),
-                                params)
     rng = np.random.default_rng(0)
+    secure = None
+    if args.secure:
+        from repro.core.params import toy_params
+        cfg = dataclasses.replace(cfg, secure_layers=(0,))
+        scfg = ServeConfig(max_batch=4, max_len=96, he_tile=4)
+        args.max_new = min(args.max_new, 3)     # HE decode steps are slow
+        W = rng.standard_normal((cfg.d_model, 4)) * 0.4
+        secure = build_secure_serving(
+            cfg, scfg, {0: W}, rng,
+            he_params=toy_params(logN=6, L=4, k=3, beta=2))
+    else:
+        scfg = ServeConfig(max_batch=4, max_len=96)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    batcher = ContinuousBatcher(cfg, scfg, params, secure=secure)
     ids = []
     for r in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=8 + r).astype(np.int32)
-        ids.append(batcher.submit(prompt, max_new=args.max_new))
+        tenant = TENANTS[r % 2] if args.secure else "default"
+        ids.append(batcher.submit(prompt, max_new=args.max_new,
+                                  tenant=tenant))
 
     steps = 0
     while batcher.step():
@@ -39,6 +66,15 @@ def main():
         print(f"request {rid}: {len(toks)} tokens -> {toks[:10]}...")
     print(f"served {len(ids)} requests in {steps} decode steps "
           f"(continuous batching over 4 slots)")
+    if secure is not None:
+        rep = secure.report()
+        print(f"secure: {rep['calls']} HE calls in "
+              f"{rep['program_launches']} launches "
+              f"({rep['launches_per_step']:.1f}/step, "
+              f"{len(TENANTS)} tenants), "
+              f"hoist dedup saved {rep['hoist_saved_bytes']} bytes")
+        print(f"program cache: {rep['cache']}")
+        print(f"session pool: {rep['pool']}")
 
 
 if __name__ == "__main__":

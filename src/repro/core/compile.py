@@ -136,6 +136,13 @@ class HEContext:
         self._jit: dict = {}            # pipeline cache (key -> jitted fn)
         self._compiled: dict = {}       # compile memo (key -> program)
         self._generation = 0            # bumped by invalidate()
+        # monotonic execution counters (NOT reset by invalidate — they are
+        # lifetime stats, not cached state): "hlt_launches" counts CompiledHLT
+        # invocations (one slot-indexed pipeline launch each), and
+        # "program_launches" counts program-level calls (HEMMProgram /
+        # BlockMMProgram).  The serving layer asserts its one-launch-per-step
+        # invariant against deltas of these.
+        self.counters = {"hlt_launches": 0, "program_launches": 0}
         # distributed execution: a (pod, data, model) mesh makes the
         # schedule="sharded" SPMD program available — limbs shard over
         # `model`, the ciphertext/tile batch over `pod`×`data`
@@ -553,6 +560,7 @@ class CompiledHLT:
 
     def __call__(self, items):
         self.ctx._check_generation(self._gen)
+        self.ctx.counters["hlt_launches"] += 1
         if self.plan.schedule.startswith("sharded"):
             if self.plan.batch is None:
                 return self._run_sharded([items])[0]
@@ -784,6 +792,7 @@ class HEMMProgram:
 
     def __call__(self, ctA: Ciphertext, ctB: Ciphertext) -> Ciphertext:
         self.ctx._check_generation(self._gen)
+        self.ctx.counters["program_launches"] += 1
         eng, keys, p = self.ctx.eng, self.ctx.keys, self.mm_plan
         assert ctA.level == ctB.level == self.plan.level
         if self.plan.batched:
@@ -863,6 +872,230 @@ def compile_hemm(ctx: HEContext, plan, *, level: Optional[int] = None,
         ctx, plan,
         HEMMPlan(m=plan.m, l=plan.l, n=plan.n, schedule=schedule, level=level,
                  batched=batched, step1=s1_plan, step2=s2_plan),
+        step1, step2)
+    ctx._compiled[memo_key] = prog
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# compile_blockmm -> BlockMMProgram (the whole tile grid as TWO launches)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMMPlan:
+    """Inspectable compile summary for one block HE MM over a tile grid.
+
+    ``m``/``l``/``n`` are the per-tile matrix dimensions and ``grid`` the
+    (gm, gl, gn) tile grid — C[i][j] = Σ_k A[i][k]·B[k][j] with every tile a
+    single ciphertext.  The whole grid compiles to TWO slot-indexed HLT
+    launches per execution (``hlt_launches``): Step 1 σ/τ-transforms every
+    A/B tile in one launch, Step 2 runs ALL l·(gm·gl + gl·gn) ε/ω HLTs in
+    one launch (the per-``k`` launch loop of the pre-subsystem batched path
+    folded into the batch axis).  ``hlt_launches_naive`` is what a loop of
+    per-tile-pair HEMMPrograms would issue — the launch amortization the
+    serving batcher reports per decode step.  ``step1``/``step2`` embed the
+    stage :class:`HLTPlan` objects; the aggregate properties sum them.
+    """
+
+    m: int
+    l: int
+    n: int
+    grid: tuple                         # (gm, gl, gn) tile grid
+    schedule: str
+    level: int                          # input level; output is level - 3
+    step1: HLTPlan
+    step2: HLTPlan
+    depth: int = 3
+
+    @property
+    def hlt_launches(self) -> int:
+        """Slot-indexed pipeline launches per execution: always 2."""
+        return 2
+
+    @property
+    def hlt_launches_naive(self) -> int:
+        """Launches a loop of per-tile-pair HEMMPrograms would issue
+        (each pair: one Step-1 and one Step-2 batched launch)."""
+        gm, gl, gn = self.grid
+        return 2 * gm * gl * gn
+
+    @property
+    def rotations(self) -> int:
+        """Total real rotations per execution (both HLT stages)."""
+        return self.step1.rotations + self.step2.rotations
+
+    @property
+    def operand_bytes(self) -> int:
+        """Deduped key/diagonal operand bytes across both stages."""
+        return self.step1.operand_bytes + self.step2.operand_bytes
+
+    @property
+    def operand_bytes_naive(self) -> int:
+        """Key/diagonal bytes B-fold stacking would have allocated."""
+        return self.step1.operand_bytes_naive + self.step2.operand_bytes_naive
+
+    @property
+    def hoist_bytes(self) -> int:
+        """Hoisting-product bytes after ct-slot dedup (one product per
+        UNIQUE tile per stage, per the compile-time aliasing hint)."""
+        return self.step1.hoist_bytes + self.step2.hoist_bytes
+
+    @property
+    def hoist_bytes_naive(self) -> int:
+        """Hoisting-product bytes of the per-element (no-dedup) layout."""
+        return self.step1.hoist_bytes_naive + self.step2.hoist_bytes_naive
+
+    @property
+    def collective_bytes(self) -> int:
+        """Predicted cross-device bytes per execution (0 off-mesh)."""
+        return self.step1.collective_bytes + self.step2.collective_bytes
+
+
+class BlockMMProgram:
+    """A compiled block HE MM: ``prog(A_tiles, B_tiles) -> C_tiles``.
+
+    ``A_tiles`` is a gm×gl and ``B_tiles`` a gl×gn list-of-lists of
+    ciphertext tiles (``SecureMatmulEngine.encrypt_tiles`` layout); the
+    result is the gm×gn grid of accumulated output ciphertexts.  Repeated
+    tile OBJECTS (e.g. shared-prompt rows the serving batcher aliases to one
+    ciphertext) are transformed once in Step 1 and hoisted once in Step 2:
+    execution re-derives the aliasing from object identity, reuses one
+    Step-1 output per unique input, and the slot-indexed kernel routes every
+    batch element to its unique hoisting product.
+    """
+
+    def __init__(self, ctx: HEContext, mm_plan, plan: BlockMMPlan,
+                 step1: "CompiledHLT", step2: "CompiledHLT"):
+        self.ctx = ctx
+        self.mm_plan = mm_plan          # the per-tile HeMMPlan (math)
+        self.plan = plan
+        self._step1 = step1
+        self._step2 = step2
+        self._gen = ctx._generation
+
+    def __call__(self, A_tiles, B_tiles) -> list:
+        self.ctx._check_generation(self._gen)
+        self.ctx.counters["program_launches"] += 1
+        eng, keys, p = self.ctx.eng, self.ctx.keys, self.mm_plan
+        gm, gl, gn = self.plan.grid
+        assert len(A_tiles) == gm and len(A_tiles[0]) == gl, "A grid mismatch"
+        assert len(B_tiles) == gl and len(B_tiles[0]) == gn, "B grid mismatch"
+        ik = [(i, k) for i in range(gm) for k in range(gl)]
+        kj = [(k, j) for k in range(gl) for j in range(gn)]
+        nA, nB = len(ik), len(kj)
+        items1 = ([A_tiles[i][k] for i, k in ik]
+                  + [B_tiles[k][j] for k, j in kj])
+        for it in items1:
+            assert it.level == self.plan.level, (it.level, self.plan.level)
+        # Step 1 — every tile σ/τ-transformed in ONE launch; alias the
+        # outputs of repeated input OBJECTS to one output object so Step 2's
+        # identity dedup hoists each unique tile once (outputs of aliased
+        # inputs are bit-identical, so reusing the first is exact).
+        _, slots1 = _dedup_by_identity(items1)
+        outs = self._step1(items1)
+        rep: dict = {}
+        outs = [outs[rep.setdefault(s, b)] for b, s in enumerate(slots1)]
+        sharded = self.plan.schedule.startswith("sharded")
+        if sharded or self.plan.schedule == "baseline":
+            # sharded hoists inside the SPMD program (once per unique ct per
+            # rank); baseline never hoists — both consume Ciphertexts
+            hst = outs
+        else:
+            uniq, uslots = _dedup_by_identity(outs)
+            hu = hoist_batched(eng, uniq)
+            hst = [hu[s] for s in uslots]
+        # Step 2 — ALL l·(nA + nB) ε/ω HLTs as ONE slot-indexed launch
+        items2 = ([hst[t] for _ in range(p.l) for t in range(nA)]
+                  + [hst[nA + t] for _ in range(p.l) for t in range(nB)])
+        res = self._step2(items2)
+        acc: list = [[None] * gn for _ in range(gm)]
+        for kk in range(p.l):
+            Ak = {t: res[kk * nA + ti] for ti, t in enumerate(ik)}
+            Bk = {t: res[p.l * nA + kk * nB + ti] for ti, t in enumerate(kj)}
+            for i in range(gm):
+                for j in range(gn):
+                    for k in range(gl):
+                        prod = eng.rescale(eng.mult(Ak[i, k], Bk[k, j], keys))
+                        acc[i][j] = (prod if acc[i][j] is None
+                                     else eng.add(acc[i][j], prod))
+        return acc
+
+
+def compile_blockmm(ctx: HEContext, plan, grid, *,
+                    level: Optional[int] = None,
+                    schedule: Optional[str] = None,
+                    rotation_chunk: Optional[int] = None,
+                    a_slots: Optional[Sequence[int]] = None,
+                    b_slots: Optional[Sequence[int]] = None
+                    ) -> BlockMMProgram:
+    """Compile a (gm, gl, gn) block MM over single-ciphertext tiles into a
+    reusable BlockMMProgram — the WHOLE grid as two slot-indexed launches.
+
+    ``plan`` is the per-tile HeMMPlan (core/hemm.py plan_hemm for the tile
+    shape); ``grid`` the tile grid.  ``a_slots`` / ``b_slots`` are optional
+    compile-time aliasing hints over the row-major gm·gl A tiles / gl·gn B
+    tiles (equal ids = the SAME ciphertext tile will be passed — the serving
+    batcher's shared-prompt pattern); like compile_hlt's ``ct_slots`` they
+    size the plan's hoist-dedup accounting and pre-build sharded slot
+    tables, while execution always re-derives aliasing from object identity.
+
+    ``schedule=None`` defers to the cost model with the full Step-2 batch
+    (l·(gm·gl + gl·gn) elements over gm·gl + gl·gn unique inputs).  Memoized
+    on the context (same plan + grid + knobs → same program).
+    """
+    assert ctx.keys is not None, "HEContext has no keys; call ctx.keygen()"
+    eng = ctx.eng
+    gm, gl, gn = grid = tuple(int(g) for g in grid)
+    assert gm > 0 and gl > 0 and gn > 0, grid
+    level = eng.params.L if level is None else level
+    nA, nB = gm * gl, gl * gn
+    if a_slots is None:
+        a_slots = tuple(range(nA))
+    else:
+        assert len(a_slots) == nA, (len(a_slots), nA)
+        remap: dict = {}
+        a_slots = tuple(remap.setdefault(s, len(remap)) for s in a_slots)
+    if b_slots is None:
+        b_slots = tuple(range(nB))
+    else:
+        assert len(b_slots) == nB, (len(b_slots), nB)
+        remap = {}
+        b_slots = tuple(remap.setdefault(s, len(remap)) for s in b_slots)
+    off = max(a_slots) + 1
+    slots1 = a_slots + tuple(off + s for s in b_slots)
+    nbeta = len(eng.tools.digit_bases(level))
+    if schedule is None:
+        schedule = select_schedule(
+            eng.params, nbeta=nbeta, headroom=ctx.vmem_headroom,
+            n_model=ctx.n_model, n_ct=ctx.n_ct, d=plan.ds_sigma.d,
+            ctb=plan.l * (nA + nB), n_uniq=len(set(slots1)))
+
+    memo_key = ("blockmm", _StrongKey(plan), grid, schedule, level,
+                rotation_chunk, a_slots, b_slots)
+    hit = ctx._compiled.get(memo_key)
+    if hit is not None:
+        return hit
+
+    step1 = compile_hlt(
+        ctx, [plan.ds_sigma] * nA + [plan.ds_tau] * nB, level=level,
+        schedule=schedule, rotation_chunk=rotation_chunk, ct_slots=slots1)
+    # Step 2's batch order is k-major (all A elements of iteration k, then
+    # the next k; B after all A) — BlockMMProgram.__call__ indexes by it
+    step2_sets = ([plan.ds_eps[k] for k in range(plan.l)
+                   for _ in range(nA)]
+                  + [plan.ds_omega[k] for k in range(plan.l)
+                     for _ in range(nB)])
+    slots2 = (tuple(a_slots[t] for _ in range(plan.l) for t in range(nA))
+              + tuple(off + b_slots[t] for _ in range(plan.l)
+                      for t in range(nB)))
+    step2 = compile_hlt(ctx, step2_sets, level=level - 1, schedule=schedule,
+                        rotation_chunk=rotation_chunk, ct_slots=slots2)
+    prog = BlockMMProgram(
+        ctx, plan,
+        BlockMMPlan(m=plan.m, l=plan.l, n=plan.n, grid=grid,
+                    schedule=schedule, level=level,
+                    step1=step1.plan, step2=step2.plan),
         step1, step2)
     ctx._compiled[memo_key] = prog
     return prog

@@ -226,6 +226,33 @@ def hlt_stage_costs(params: "HEParams", *, d: int, d_pad: int, nbeta: int,
     }
 
 
+def serve_amortization(params: "HEParams", *, nbeta: int | None = None,
+                       n_calls: int, n_tiles: int, n_uniq_tiles: int,
+                       launches: int, launches_naive: int) -> dict:
+    """Per-decode-step amortization stats for the cross-request HE batcher.
+
+    ``n_calls`` is how many in-flight requests' secure-layer calls the step
+    folded together, ``n_tiles`` the activation tiles they submitted and
+    ``n_uniq_tiles`` the unique ciphertexts after shared-prompt aliasing
+    (``n_tiles - n_uniq_tiles`` hoisting products skipped — each worth
+    ``hlt_hoist_bytes``).  ``launches`` / ``launches_naive`` come from
+    BlockMMPlan: what the batched step issued vs what one program per
+    request-tile-pair would have.  The serving layer attaches this dict to
+    every step's stats and BENCH_serve.json aggregates it.
+    """
+    hoist = hlt_hoist_bytes(params, nbeta=nbeta)
+    n_uniq_tiles = max(0, min(n_uniq_tiles, n_tiles))
+    return {
+        "n_calls": int(n_calls),
+        "launches": int(launches),
+        "launches_naive": int(launches_naive),
+        "launch_amortization_x": launches_naive / max(1, launches),
+        "hoist_bytes": int(hoist * n_uniq_tiles),
+        "hoist_bytes_naive": int(hoist * n_tiles),
+        "hoist_dedup_saved_bytes": int(hoist * (n_tiles - n_uniq_tiles)),
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class CostModel:
     """Paper §III data sizes, on-chip memory requirements and traffic.

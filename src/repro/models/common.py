@@ -143,7 +143,9 @@ def decode_attention(q, k, v, kv_len):
     max/sum combined by all-reduce), so a seq-sharded cache divides the
     per-chip HBM read by the seq shards (§Perf zamba2/long_500k iteration).
 
-    q: (B, 1, H, D); k, v: (B, Skv, KV, D); kv_len: valid prefix length."""
+    q: (B, 1, H, D); k, v: (B, Skv, KV, D); kv_len: valid prefix length —
+    a scalar (uniform batch) or a (B,) vector (continuous batching: slots
+    admitted at different prompt lengths decode at different positions)."""
     B, _, H, D = q.shape
     Skv, KV = k.shape[1], k.shape[2]
     g = H // KV
@@ -151,7 +153,9 @@ def decode_attention(q, k, v, kv_len):
     qg = q.reshape(B, 1, KV, g, D)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
     kpos = jnp.arange(Skv, dtype=jnp.int32)
-    s = jnp.where((kpos > kv_len)[None, None, None, None, :], -1e30, s)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    s = jnp.where((kpos[None, :] > kv_len[:, None])[:, None, None, None, :],
+                  -1e30, s)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v)
     return out.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, D)
@@ -281,13 +285,19 @@ def attn_forward(cfg: ModelConfig, p, x, positions, *, kv_cache=None,
     k = shard(k, "batch", "seq", "kv_heads", None)
     v = shard(v, "batch", "seq", "kv_heads", None)
     if kv_cache is not None:
-        zero = jnp.int32(0)   # uniform i32 indices (x64 flag is global)
-        idx = (zero, jnp.asarray(cache_len, jnp.int32), zero, zero)
-        kc = jax.lax.dynamic_update_slice(kv_cache["k"], k, idx)
-        vc = jax.lax.dynamic_update_slice(kv_cache["v"], v, idx)
+        cl = jnp.asarray(cache_len, jnp.int32)
+        if cl.ndim:          # per-slot positions (ragged continuous batching)
+            assert S == 1, "vector cache_len is a decode-only path"
+            rows = jnp.arange(B, dtype=jnp.int32)
+            kc = kv_cache["k"].at[rows, cl].set(k[:, 0])
+            vc = kv_cache["v"].at[rows, cl].set(v[:, 0])
+        else:
+            zero = jnp.int32(0)   # uniform i32 indices (x64 flag is global)
+            idx = (zero, cl, zero, zero)
+            kc = jax.lax.dynamic_update_slice(kv_cache["k"], k, idx)
+            vc = jax.lax.dynamic_update_slice(kv_cache["v"], v, idx)
         if S == 1:    # decode: direct masked softmax (seq-parallelizable)
-            out = decode_attention(q, kc, vc,
-                                   jnp.asarray(cache_len, jnp.int32))
+            out = decode_attention(q, kc, vc, cl)
         else:
             out = blockwise_attention(q, kc, vc, causal=True,
                                       q_offset=cache_len,

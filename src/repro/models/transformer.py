@@ -267,10 +267,19 @@ def prefill(cfg: ModelConfig, params, tokens, cache, *, embeds=None,
     return _logits(cfg, params, x[:, -1:]), cache
 
 
+def _decode_positions(pos):
+    """Scalar pos (uniform batch) -> (1, 1); (B,) vector (continuous
+    batching, per-slot lengths) -> (B, 1) so RoPE and the KV write use each
+    slot's own position."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return pos.reshape(-1, 1) if pos.ndim else pos + jnp.zeros((1, 1),
+                                                               jnp.int32)
+
+
 def decode_step(cfg: ModelConfig, params, token, cache, pos, *, frontend=None):
-    """token: (B, 1) int32; pos: scalar current length."""
+    """token: (B, 1) int32; pos: scalar current length, or per-slot (B,)."""
     x = _embed(cfg, params, token)
-    positions = pos + jnp.zeros((1, 1), dtype=jnp.int32)
+    positions = _decode_positions(pos)
     x, cache = _serve_scan(cfg, params, x, positions, cache, pos,
                            frontend=frontend)
     return _logits(cfg, params, x), cache
@@ -279,6 +288,6 @@ def decode_step(cfg: ModelConfig, params, token, cache, pos, *, frontend=None):
 def decode_step_embeds(cfg: ModelConfig, params, embeds, cache, pos):
     """[audio] decode: one precomputed frame embedding (B, 1, d)."""
     x = _embed(cfg, params, None, embeds)
-    positions = pos + jnp.zeros((1, 1), dtype=jnp.int32)
+    positions = _decode_positions(pos)
     x, cache = _serve_scan(cfg, params, x, positions, cache, pos)
     return _logits(cfg, params, x), cache

@@ -33,10 +33,9 @@ from typing import Optional
 import numpy as np
 
 from repro.core.ckks import Ciphertext, CkksEngine, Keys
-from repro.core.compile import HEContext, compile_hemm, compile_hlt
+from repro.core.compile import HEContext, compile_blockmm, compile_hemm
 from repro.core.costmodel import select_schedule
 from repro.core.hemm import plan_hemm, encrypt_matrix, decrypt_matrix
-from repro.core.hlt import hoist_batched
 from repro.core.params import HEParams
 
 
@@ -50,9 +49,17 @@ class SecureMatmulEngine:
     mesh: Optional[object] = None    # jax Mesh: enables schedule="sharded"
     #   (ciphertext tiles shard over pod×data, RNS limbs over model — the
     #   2-D parallel block MM; the cost model picks it when worthwhile)
+    ctx: Optional[HEContext] = None  # inject an externally owned context
+    #   (the serving session pool passes per-tenant contexts so keysets and
+    #   arenas stay tenant-isolated while engines share one param set)
 
     def __post_init__(self):
-        self.ctx = HEContext(CkksEngine(self.params), mesh=self.mesh)
+        if self.ctx is None:
+            self.ctx = HEContext(CkksEngine(self.params), mesh=self.mesh)
+        else:
+            assert self.ctx.eng.params is self.params or \
+                self.ctx.eng.params == self.params, \
+                "injected HEContext was built for different HE params"
         self.eng = self.ctx.eng
         assert 3 * self.tile * self.tile <= 2 * self.eng.params.slots
         self._plan = plan_hemm(self.eng, self.tile, self.tile, self.tile)
@@ -125,52 +132,23 @@ class SecureMatmulEngine:
             out.append(row)
         return out
 
-    def _matmul_encrypted_batched(self, A_tiles, B_tiles) -> list:
-        """Batched block MM: gm·gl + gl·gn HLTs per pipeline stage instead of
-        gm·gl·gn·(2 + 2l) sequential single-ciphertext HLT launches; operands
-        deduped to one arena slot per transform, hoisting vmapped across the
-        ciphertext axis."""
-        ctx, eng, plan = self.ctx, self.eng, self._plan
-        sched, chunk = self.schedule, self.rotation_chunk
-        gm, gl = len(A_tiles), len(A_tiles[0])
-        gn = len(B_tiles[0])
-        ik = [(i, k) for i in range(gm) for k in range(gl)]
-        kj = [(k, j) for k in range(gl) for j in range(gn)]
-        level = A_tiles[0][0].level
-        # Step 1 — every tile transformed exactly once, one slot-indexed
-        # launch; σ/τ key+diagonal tensors stored once, not per tile.
-        step1 = compile_hlt(
-            ctx, [plan.ds_sigma] * len(ik) + [plan.ds_tau] * len(kj),
-            level=level, schedule=sched, rotation_chunk=chunk)
-        outs = step1([A_tiles[i][k] for i, k in ik]
-                     + [B_tiles[k][j] for k, j in kj])
-        if sched is not None and sched.startswith("sharded"):
-            # the SPMD program hoists internally (fused datapath: once per
-            # unique ciphertext per rank); Step 2 consumes the Step-1
-            # ciphertexts directly (tile axis stays mesh-sharded)
-            hst = outs
-        else:
-            # Decomp/ModUp across the whole tile set as ONE vmapped pipeline
-            hst = hoist_batched(eng, outs)
-        hA0 = {p: hst[t] for t, p in enumerate(ik)}
-        hB0 = {p: hst[len(ik) + t] for t, p in enumerate(kj)}
-        # Step 2 — per inner iteration, ONE launch over all A0 and B0 tiles
-        acc: list = [[None] * gn for _ in range(gm)]
-        for kk in range(plan.l):
-            step2 = compile_hlt(
-                ctx, [plan.ds_eps[kk]] * len(ik) + [plan.ds_omega[kk]] * len(kj),
-                level=level - 1, schedule=sched, rotation_chunk=chunk)
-            res = step2([hA0[p] for p in ik] + [hB0[p] for p in kj])
-            Ak = {p: res[t] for t, p in enumerate(ik)}
-            Bk = {p: res[len(ik) + t] for t, p in enumerate(kj)}
-            for i in range(gm):
-                for j in range(gn):
-                    for k in range(gl):
-                        prod = eng.rescale(
-                            eng.mult(Ak[i, k], Bk[k, j], ctx.keys))
-                        acc[i][j] = (prod if acc[i][j] is None
-                                     else eng.add(acc[i][j], prod))
-        return acc
+    def _matmul_encrypted_batched(self, A_tiles, B_tiles,
+                                  a_slots=None, b_slots=None) -> list:
+        """Batched block MM through ``compile_blockmm``: the WHOLE grid as
+        TWO slot-indexed launches (one Step-1 over every tile, one Step-2
+        over all l inner iterations) instead of gm·gl·gn·(2 + 2l) sequential
+        single-ciphertext HLT launches; operands deduped to one arena slot
+        per transform, hoisting vmapped across the tile set, repeated tile
+        objects (shared serving prompts) hoisted once.  ``a_slots`` /
+        ``b_slots`` are the row-major aliasing hints forwarded to the
+        compile (the serving batcher's shared-prompt pattern)."""
+        prog = compile_blockmm(
+            self.ctx, self._plan,
+            (len(A_tiles), len(B_tiles), len(B_tiles[0])),
+            level=A_tiles[0][0].level, schedule=self.schedule,
+            rotation_chunk=self.rotation_chunk,
+            a_slots=a_slots, b_slots=b_slots)
+        return prog(A_tiles, B_tiles)
 
     def decrypt_tiles(self, C_tiles, m: int, n: int) -> np.ndarray:
         t = self.tile

@@ -20,7 +20,8 @@ from repro.models.common import ModelConfig
 class ServeConfig:
     max_batch: int = 8
     max_len: int = 512
-    temperature: float = 0.0       # 0 = greedy
+    temperature: float = 0.0       # 0 = greedy; >0 = seeded categorical
+    seed: int = 0                  # sampling rng seed (determinism tests)
     # secure (HE) layer serving — the engine owns an HEContext and compiles
     # slot-indexed HLT pipelines (core/compile.py).  he_schedule=None defers
     # to the cost model (select_schedule); setting it is the DEPRECATED
@@ -34,6 +35,10 @@ class ServeConfig:
     he_tile: int = 8
     he_rotation_chunk: Optional[int] = None   # None = cost-model VMEM pick
     he_mesh: Optional[object] = None          # None = single device
+    # multi-tenant secure serving (serve/sessions.py + serve/he_batcher.py)
+    he_max_sessions: int = 4       # tenant arenas kept live (LRU eviction)
+    he_max_programs: int = 32      # HEProgramCache capacity
+    he_batch_requests: bool = True  # False = per-request launches (ablation)
 
 
 def build_secure_linears(cfg: ModelConfig, scfg: ServeConfig, weights: dict,
@@ -54,6 +59,48 @@ def build_secure_linears(cfg: ModelConfig, scfg: ServeConfig, weights: dict,
         rotation_chunk=scfg.he_rotation_chunk, mesh=scfg.he_mesh)
     return {i: SecureLinear(engine, np.asarray(W), rng)
             for i, W in weights.items() if i in cfg.secure_layers}
+
+
+@dataclasses.dataclass
+class SecureServing:
+    """The multi-tenant secure-serving bundle a ContinuousBatcher drives:
+    session pool (per-tenant keysets), program cache, cross-request batcher.
+    """
+    pool: object                   # serve.sessions.SessionPool
+    cache: object                  # serve.sessions.HEProgramCache
+    batcher: object                # serve.he_batcher.CrossRequestHEBatcher
+
+    def report(self) -> dict:
+        return self.batcher.report()
+
+
+def build_secure_serving(cfg: ModelConfig, scfg: ServeConfig, weights: dict,
+                         rng: np.random.Generator,
+                         he_params=None) -> Optional[SecureServing]:
+    """Construct the secure-serving subsystem for ``cfg.secure_layers``:
+    a SessionPool over shared HE params (each tenant keygens lazily on its
+    first request and encrypts the secure layers' weights under its OWN
+    keyset), an HEProgramCache, and the CrossRequestHEBatcher that folds
+    every in-flight request's secure calls into one launch per
+    (tenant, layer) each decode step.  Returns None when no layer is
+    flagged secure."""
+    from repro.core.params import toy_params
+    from repro.serve.he_batcher import CrossRequestHEBatcher
+    from repro.serve.sessions import HEProgramCache, SessionPool
+    if not cfg.secure_layers:
+        return None
+    pool = SessionPool(
+        he_params if he_params is not None
+        else toy_params(logN=7, L=4, k=3, beta=2),
+        tile=scfg.he_tile, max_live=scfg.he_max_sessions,
+        schedule=scfg.he_schedule, rotation_chunk=scfg.he_rotation_chunk,
+        mesh=scfg.he_mesh)
+    pool.attach_weights({i: np.asarray(W) for i, W in weights.items()
+                         if i in cfg.secure_layers})
+    cache = HEProgramCache(capacity=scfg.he_max_programs)
+    batcher = CrossRequestHEBatcher(pool, cache, rng=rng,
+                                    batch_requests=scfg.he_batch_requests)
+    return SecureServing(pool=pool, cache=cache, batcher=batcher)
 
 
 def serve_prefill_step(cfg: ModelConfig, params, tokens, cache):
@@ -126,23 +173,55 @@ def cache_shardings(rules, cache_shapes, seq_shard_kv: bool = False):
 
 class ContinuousBatcher:
     """Host-side continuous batching: fixed device batch of slots; finished
-    sequences are replaced by queued requests between decode steps."""
+    sequences are replaced by queued requests between decode steps.
 
-    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+    Each slot decodes at ITS OWN position (slots admitted at different
+    prompt lengths pass a per-slot position vector to ``decode_step``), and
+    sampling follows ``ServeConfig.temperature``: greedy at 0, seeded
+    categorical above (the rng is seeded from ``ServeConfig.seed`` so runs
+    are reproducible).
+
+    ``secure`` (a :class:`SecureServing` bundle from
+    ``build_secure_serving``) turns on the secure-layer path: every decode
+    step, each active request submits ONE SecureCall per layer in
+    ``cfg.secure_layers`` — the just-decoded token's embedding row to be
+    projected under that request's TENANT keyset — and a single flush runs
+    them all as one launch per (tenant, layer).  Per-request secure outputs
+    accumulate in ``secure_results``; per-step launch/dedup stats in
+    ``secure.batcher.steps``.
+    """
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
+                 secure=None):
         self.cfg, self.scfg, self.params = cfg, scfg, params
         self.cache = tf.init_cache(cfg, scfg.max_batch, scfg.max_len)
         self.slots: list[Optional[dict]] = [None] * scfg.max_batch
         self.queue: list[dict] = []
         self.results: dict[int, list[int]] = {}
+        self.secure = secure
+        self.secure_results: dict[int, list] = {}
         self._next_id = 0
+        self._rng = np.random.default_rng(scfg.seed)
 
-    def submit(self, prompt_tokens: np.ndarray, max_new: int) -> int:
+    def submit(self, prompt_tokens: np.ndarray, max_new: int,
+               tenant: str = "default") -> int:
         rid = self._next_id
         self._next_id += 1
         self.queue.append({"id": rid, "prompt": prompt_tokens,
-                           "max_new": max_new, "done": 0})
+                           "max_new": max_new, "done": 0, "tenant": tenant})
         self.results[rid] = []
+        self.secure_results[rid] = []
         return rid
+
+    def _sample(self, logits_row: np.ndarray) -> int:
+        """Greedy at temperature 0, seeded categorical above."""
+        t = self.scfg.temperature
+        if t <= 0:
+            return int(np.argmax(logits_row))
+        z = np.asarray(logits_row, np.float64) / t
+        z -= z.max()                      # stable softmax
+        p = np.exp(z)
+        return int(self._rng.choice(len(p), p=p / p.sum()))
 
     def _admit(self):
         for i, s in enumerate(self.slots):
@@ -155,11 +234,29 @@ class ContinuousBatcher:
                 self.cache = jax.tree.map(
                     lambda c, c1: c.at[:, :, i:i + 1].set(c1), self.cache,
                     cache1)
-                tok = int(jnp.argmax(logits[0, -1]))
+                tok = self._sample(np.asarray(logits[0, -1]))
                 self.results[req["id"]].append(tok)
                 req["pos"] = req["prompt"].shape[0]
                 req["last"] = tok
                 self.slots[i] = req
+
+    def _secure_step(self, active) -> None:
+        """Fold every active request's secure-layer calls into one flush
+        (one launch per tenant per layer — serve/he_batcher.py)."""
+        from repro.serve.he_batcher import SecureCall
+        embed = np.asarray(self.params["embed"], np.float64)
+        for i in active:
+            s = self.slots[i]
+            x = embed[s["last"]]
+            for layer in self.cfg.secure_layers:
+                self.secure.batcher.submit(
+                    SecureCall(s["id"], layer, x, s["tenant"]))
+        res = self.secure.batcher.flush()
+        for i in active:
+            s = self.slots[i]
+            self.secure_results[s["id"]].append(
+                {layer: res[(s["id"], layer)]
+                 for layer in self.cfg.secure_layers})
 
     def step(self) -> bool:
         """One decode step over all active slots. Returns False when idle."""
@@ -167,16 +264,23 @@ class ContinuousBatcher:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return False
+        if self.secure is not None:
+            self._secure_step(active)
         toks = np.zeros((self.scfg.max_batch, 1), np.int32)
-        pos = max(self.slots[i]["pos"] for i in active)
+        # per-slot positions: each slot decodes against ITS cache length —
+        # inactive slots get 0 (their writes are overwritten by the next
+        # admit's prefill, and their sampled tokens are never read)
+        pos = np.zeros((self.scfg.max_batch,), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i]["last"]
+            pos[i] = self.slots[i]["pos"]
         logits, self.cache = tf.decode_step(
-            self.cfg, self.params, jnp.asarray(toks), self.cache, pos)
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            self.cfg, self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(pos))
+        logits = np.asarray(logits[:, 0])
         for i in active:
             s = self.slots[i]
-            s["last"] = int(nxt[i])
+            s["last"] = self._sample(logits[i])
             s["pos"] += 1
             s["done"] += 1
             self.results[s["id"]].append(s["last"])

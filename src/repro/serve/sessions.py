@@ -1,0 +1,220 @@
+"""Multi-tenant secure-serving sessions: per-tenant keysets, pooled
+HE contexts, and a compiled-program cache.
+
+"Secure serving for many users" needs three things the single-engine
+SecureMatmulEngine does not give you:
+
+* **Tenant isolation** — every tenant gets its OWN CKKS keyset; a
+  ciphertext produced under tenant A's keys is garbage under tenant B's
+  (tests/test_serve_secure.py proves it).  All keysets share ONE parameter
+  set and ONE CkksEngine (NTT tables, basis views and jitted pipelines are
+  key-independent), so adding a tenant costs a keygen, not an engine.
+
+* **Bounded device memory** — each tenant's HEContext owns an operand
+  arena (rotation keys, Montgomery diagonal tensors, compiled programs)
+  that can reach many MB.  The pool keeps at most ``max_live`` arenas
+  resident: touching a session beyond that evicts the least-recently-used
+  session's ARENA (``HEContext.invalidate()``) while keeping its keys and
+  encrypted weights — a re-touched evicted tenant skips keygen and weight
+  re-encryption (the expensive, security-relevant part) and only re-runs
+  operand precompute lazily on its next compile.
+
+* **Compile amortization** — ``HEProgramCache`` fronts ``compile_blockmm``
+  with a (tile shape, grid, level, schedule, chunk, mesh) key and
+  hit/miss/eviction counters, so every decode step after the first with a
+  repeat shape skips planning and compilation entirely.  The key
+  deliberately EXCLUDES the aliasing hint: execution re-derives
+  input aliasing from object identity (core/compile.py), so one cached
+  program serves every shared-prompt pattern of the same shape.
+
+The pool is the serving-layer owner of everything keyed; the per-step
+batching logic lives in serve/he_batcher.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.ckks import CkksEngine
+from repro.core.compile import HEContext, compile_blockmm
+from repro.core.params import HEParams
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Amortization counters for one tenant session (monotonic)."""
+    keygens: int = 0          # keyset generations (1 unless keys rotated)
+    touches: int = 0          # session() lookups — keygen amortization base
+    arena_evictions: int = 0  # LRU arena drops (keys survived each one)
+    weights_encrypted: int = 0  # secure-layer weight matrices lifted to HE
+
+    @property
+    def keygen_amortization_x(self) -> float:
+        """Touches served per keygen (≥ 1 once the session is used)."""
+        return self.touches / max(1, self.keygens)
+
+
+class TenantSession:
+    """One tenant's secure-serving state: keyset + context + HE linears.
+
+    ``ctx`` is the tenant's HEContext (its keys, operand arena and compile
+    memo); ``linears`` maps model layer index -> SecureLinear whose weight
+    tiles are encrypted under THIS tenant's keys.  Sessions are built by
+    SessionPool — construct directly only in tests.
+    """
+
+    def __init__(self, tenant: str, ctx: HEContext):
+        self.tenant = tenant
+        self.ctx = ctx
+        self.engine = None              # SecureMatmulEngine (pool attaches)
+        self.linears: dict = {}         # layer index -> SecureLinear
+        self.stats = SessionStats()
+
+    @property
+    def keys(self):
+        return self.ctx.keys
+
+    def decrypt_row(self, ct, n: int) -> np.ndarray:
+        """First matrix row of a result tile ciphertext (serving output)."""
+        from repro.core.hemm import decrypt_matrix
+        t = self.engine.tile
+        return decrypt_matrix(self.ctx.eng, self.ctx.keys, ct, t, t)[0, :n]
+
+
+class SessionPool:
+    """Per-tenant TenantSessions on ONE shared engine, LRU arena eviction.
+
+    ``session(tenant, rng)`` returns the tenant's session, creating it
+    (keygen + weight encryption via ``attach``-ed layers) on first touch.
+    At most ``max_live`` sessions keep their operand arenas resident; the
+    least-recently-used session past that is arena-evicted but never
+    forgotten — its keyset and encrypted weights survive, so secure
+    serving stays correct (ciphertexts a client holds remain decryptable)
+    while device memory stays bounded.
+    """
+
+    def __init__(self, params: HEParams, *, tile: int = 8,
+                 max_live: int = 4, schedule: Optional[str] = None,
+                 rotation_chunk: Optional[int] = None, mesh=None):
+        from repro.secure import SecureMatmulEngine   # avoid import cycle
+        self.params = params
+        self.tile = tile
+        self.max_live = max(1, max_live)
+        self.schedule = schedule
+        self.rotation_chunk = rotation_chunk
+        self.mesh = mesh
+        self.eng = CkksEngine(params)   # shared: key-independent precompute
+        self._engine_cls = SecureMatmulEngine
+        self._sessions: dict = {}       # tenant -> TenantSession (LRU order)
+        self._weights: dict = {}        # layer index -> plaintext W
+        self.evictions = 0              # pool-level arena evictions
+
+    def attach_weights(self, weights: dict) -> None:
+        """Register the secure layers' plaintext weights (layer -> W); each
+        NEW session encrypts them under its own keyset at creation."""
+        self._weights = {i: np.asarray(W) for i, W in weights.items()}
+
+    def session(self, tenant: str, rng: np.random.Generator) -> TenantSession:
+        """Get-or-create the tenant's session; LRU-touch it; evict the
+        coldest arena when more than ``max_live`` are resident."""
+        sess = self._sessions.pop(tenant, None)
+        if sess is None:
+            sess = self._create(tenant, rng)
+        self._sessions[tenant] = sess   # (re)insert as most-recently-used
+        sess.stats.touches += 1
+        self._evict_cold()
+        return sess
+
+    def _create(self, tenant: str, rng: np.random.Generator) -> TenantSession:
+        from repro.secure import SecureLinear
+        ctx = HEContext(self.eng, mesh=self.mesh)
+        sess = TenantSession(tenant, ctx)
+        sess.engine = self._engine_cls(
+            self.params, tile=self.tile, schedule=self.schedule,
+            rotation_chunk=self.rotation_chunk, mesh=self.mesh, ctx=ctx)
+        sess.engine.keygen(rng)
+        sess.stats.keygens += 1
+        for i, W in self._weights.items():
+            sess.linears[i] = SecureLinear(sess.engine, W, rng)
+            sess.stats.weights_encrypted += 1
+        return sess
+
+    def _evict_cold(self) -> None:
+        live = [s for s in self._sessions.values()
+                if len(s.ctx.arena) or s.ctx._compiled or s.ctx._jit]
+        # insertion order IS recency order (session() reinserts on touch)
+        for sess in live[:max(0, len(live) - self.max_live)]:
+            sess.ctx.invalidate()       # drop arena+programs, KEEP keys
+            sess.stats.arena_evictions += 1
+            self.evictions += 1
+
+    @property
+    def live_arena_bytes(self) -> int:
+        return sum(s.ctx.arena.nbytes for s in self._sessions.values())
+
+    def report(self) -> dict:
+        """Pool-level amortization summary (BENCH_serve.json section)."""
+        return {
+            "tenants": len(self._sessions),
+            "max_live": self.max_live,
+            "arena_evictions": self.evictions,
+            "live_arena_bytes": int(self.live_arena_bytes),
+            "keygens": sum(s.stats.keygens for s in self._sessions.values()),
+            "touches": sum(s.stats.touches for s in self._sessions.values()),
+        }
+
+
+class HEProgramCache:
+    """LRU cache over ``compile_blockmm`` keyed by shape, not aliasing.
+
+    Key: (tenant, tile m/l/n, grid, level, schedule, rotation_chunk,
+    mesh factorization) — everything that changes the compiled pipelines.
+    The per-step aliasing pattern (which requests share a prompt) is
+    deliberately NOT in the key: BlockMMProgram re-derives aliasing from
+    object identity at call time, so one cached program is bit-exact for
+    every sharing pattern of the same shape and repeat shapes always hit.
+
+    A cached program is only valid for its context generation: an arena
+    eviction (SessionPool) or re-keygen bumps the generation, and the next
+    lookup drops the stale entry (counted as an eviction) and recompiles.
+    """
+
+    def __init__(self, capacity: int = 32):
+        self.capacity = max(1, capacity)
+        self._entries: dict = {}        # key -> (program, generation)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, sess: TenantSession, plan, grid, *, level: int,
+            schedule: Optional[str] = None,
+            rotation_chunk: Optional[int] = None,
+            a_slots=None, b_slots=None):
+        """The serving entry point to compile_blockmm (counted)."""
+        ctx = sess.ctx
+        key = (sess.tenant, plan.m, plan.l, plan.n, tuple(grid), level,
+               schedule, rotation_chunk, ctx.n_model, ctx.n_ct)
+        hit = self._entries.pop(key, None)
+        if hit is not None and hit[1] == ctx._generation:
+            self.hits += 1
+            self._entries[key] = hit    # reinsert as most-recently-used
+            return hit[0]
+        if hit is not None:             # stale generation: arena was evicted
+            self.evictions += 1
+        self.misses += 1
+        prog = compile_blockmm(ctx, plan, grid, level=level,
+                               schedule=schedule,
+                               rotation_chunk=rotation_chunk,
+                               a_slots=a_slots, b_slots=b_slots)
+        while len(self._entries) >= self.capacity:
+            self._entries.pop(next(iter(self._entries)))
+            self.evictions += 1
+        self._entries[key] = (prog, ctx._generation)
+        return prog
+
+    def report(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._entries),
+                "capacity": self.capacity}

@@ -356,3 +356,59 @@ def test_engine_drop_and_recreate_never_serves_stale_pipeline():
         # distinct engines -> distinct contexts even if Python recycles ids
         assert legacy_context(eng, keys) is legacy_context(eng, keys)
         del eng, keys, ct, plan                 # drop our refs; pool keeps its
+
+
+# -- ct_slots aliasing-hint mismatch (degrades accounting, never correctness)
+
+
+@pytest.mark.parametrize("schedule", ["pallas", "sharded"])
+def test_ct_slots_wrong_hint_still_bit_exact(setup, schedule):
+    """A compile-time aliasing hint that CONTRADICTS the call-time pattern
+    must not change a single bit of the output: execution re-derives
+    aliasing from object identity.  Both mismatch directions are driven —
+    hint says 'aliased' but two DIFFERENT ciphertexts arrive, and hint says
+    'distinct' but the SAME ciphertext arrives twice — on the fused and the
+    sharded (single-device fallback) schedules."""
+    s = setup
+    ctx, plan = s["ctx"], s["plan"]
+    lvl = s["ctA"].level
+    ds = [plan.ds_sigma, plan.ds_sigma]
+    truth = compile_hlt(ctx, ds, level=lvl, schedule=schedule)
+
+    # hint claims one shared input; call passes two DIFFERENT ciphertexts
+    lies_aliased = compile_hlt(ctx, ds, level=lvl, schedule=schedule,
+                               ct_slots=(0, 0))
+    got = lies_aliased([s["ctA"], s["ctB"]])
+    want = truth([s["ctA"], s["ctB"]])
+    for g, w in zip(got, want):
+        _assert_ct_equal(g, w)
+
+    # hint claims distinct inputs; call passes the SAME ciphertext twice
+    lies_distinct = compile_hlt(ctx, ds, level=lvl, schedule=schedule,
+                                ct_slots=(0, 1))
+    got = lies_distinct([s["ctA"], s["ctA"]])
+    want = truth([s["ctA"], s["ctA"]])
+    for g, w in zip(got, want):
+        _assert_ct_equal(g, w)
+
+
+def test_ct_slots_wrong_hint_degrades_accounting_only(setup):
+    """The hint sizes the PLAN's hoist-dedup accounting: an all-aliased lie
+    budgets one hoisting product, an all-distinct lie budgets one per batch
+    element (= the naive bound) — regardless of what arrives at call time."""
+    s = setup
+    ctx, plan = s["ctx"], s["plan"]
+    lvl = s["ctA"].level
+    ds = [plan.ds_sigma, plan.ds_sigma]
+    aliased = compile_hlt(ctx, ds, level=lvl, schedule="pallas",
+                          ct_slots=(0, 0))
+    distinct = compile_hlt(ctx, ds, level=lvl, schedule="pallas",
+                           ct_slots=(0, 1))
+    assert aliased.plan.n_ct_slots == 1
+    assert distinct.plan.n_ct_slots == 2
+    # hoist bytes follow the hint: half the naive bound when it promises
+    # full aliasing, equal to it when it promises none
+    assert aliased.plan.hoist_bytes * 2 == aliased.plan.hoist_bytes_naive
+    assert distinct.plan.hoist_bytes == distinct.plan.hoist_bytes_naive
+    # the two compiles share operand slots either way (same DiagSet)
+    assert aliased.plan.n_diag_slots == distinct.plan.n_diag_slots == 1
