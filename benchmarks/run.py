@@ -51,6 +51,43 @@ RESULTS: dict = {}
 # sections that get their own BENCH_<name>.json next to the --json path
 SPLIT_SECTIONS = ("blockmm", "dist", "serve")
 
+# BENCH_*.json output contract: required keys per structured section.  The
+# CI smoke steps write these files and downstream tooling tracks each perf
+# trajectory by key, so drift (a renamed or dropped field) must fail the
+# run loudly instead of silently breaking the comparison.
+BENCH_SCHEMA = {
+    "hemm": ("shape", "logN", "hlt_us_per_schedule", "hemm_us_per_schedule",
+             "step2_operand_bytes", "step2_plan"),
+    "blockmm": ("shape", "loop_us", "batched_us", "step1_operand_bytes",
+                "step1_slots", "schedule"),
+    "dist": ("batch", "logN", "per_device_count"),
+    "serve": ("requests_per_step", "batched_us", "per_request_us",
+              "batched_speedup_x", "launches_per_step", "operand_bytes",
+              "hoist_dedup_saved_bytes", "program_cache", "session_pool"),
+}
+
+
+def validate_results(results: dict) -> list:
+    """Validate the --json collector against BENCH_SCHEMA.
+
+    Structured sections must carry every required key; row-style sections
+    (table1, costmodel, fig6, ...) must hold ``us_per_call``/``derived``
+    row entries.  Returns human-readable problems (empty == valid)."""
+    problems = []
+    for section, data in results.items():
+        if section in BENCH_SCHEMA:
+            missing = [k for k in BENCH_SCHEMA[section] if k not in data]
+            if missing:
+                problems.append(f"{section}: missing required key(s) "
+                                f"{', '.join(missing)}")
+            continue
+        for name, entry in data.items():
+            if not isinstance(entry, dict) or \
+                    {"us_per_call", "derived"} - set(entry):
+                problems.append(f"{section}/{name}: row entries need "
+                                f"us_per_call and derived")
+    return problems
+
 
 def _t(fn, *args, reps=3, **kw):
     """min-over-reps wall time in µs (each rep blocked to completion)."""
@@ -470,6 +507,11 @@ def main() -> None:
         else:
             fn()
     if args.json:
+        problems = validate_results(RESULTS)
+        if problems:
+            for p in problems:
+                print(f"# BENCH schema drift: {p}", file=sys.stderr)
+            sys.exit(1)
         split = {s: RESULTS.pop(s) for s in SPLIT_SECTIONS if s in RESULTS}
         if RESULTS:
             with open(args.json, "w") as f:

@@ -1,0 +1,27 @@
+"""Compile-time static verifier for HE programs (DESIGN.md §6).
+
+Four passes run over compiled plans and their jaxprs BEFORE execution,
+wired into ``compile_hlt``/``compile_hemm``/``compile_blockmm`` behind
+``HEContext(verify="error"|"warn"|"off")``:
+
+* ``level_scale``  — symbolic CKKS level/scale tracker (LS rules)
+* ``jaxpr_lint``   — sharded-program jaxpr invariants (JX rules)
+* ``vmem``         — fused-kernel VMEM budget check (VM rules)
+* ``arena``        — arena slot-table / generation / aliasing audit (AR rules)
+
+``verify.verify_program(prog)`` runs every applicable pass on a compiled
+program and returns the collected :class:`Diagnostic` list; the CLI
+(``python -m repro.analysis.lint``) sweeps representative programs across
+the ``configs/fame_sets.py`` verification parameter sets.
+"""
+from repro.analysis.diagnostics import (RULES, Diagnostic, VerificationError,
+                                        VerificationWarning, format_report)
+from repro.analysis.level_scale import (CtState, ScaleTracker, Trace,
+                                        trace_chain, trace_hemm, trace_hlt)
+from repro.analysis.verify import verify_program
+
+__all__ = [
+    "RULES", "Diagnostic", "VerificationError", "VerificationWarning",
+    "format_report", "CtState", "ScaleTracker", "Trace", "trace_chain",
+    "trace_hemm", "trace_hlt", "verify_program",
+]

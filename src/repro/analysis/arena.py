@@ -1,0 +1,132 @@
+"""Arena / aliasing auditor — the verifier's AR pass.
+
+Validates a compiled program's arena-resident slot tables against the
+owning context's generation (AR001 — the static analogue of the runtime
+``_check_generation`` guard), checks slot-table well-formedness (AR002),
+and flags ``ct_slots`` aliasing hints whose hoist-dedup claim the chosen
+schedule cannot deliver (AR003/AR004) — the plan's ``hoist_bytes``
+accounting would silently overstate the dedup, never the math.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.diagnostics import Diagnostic
+
+# Schedules whose execution path does NOT itself dedup hoists by object
+# identity.  mo/hoisted loop single executions: hoisting work is only
+# reused when the CALLER passes the same pre-hoisted product (BlockMMProgram
+# does); repeated raw Ciphertexts re-hoist per element while the plan's
+# hoist_bytes trusts the hint.  baseline never hoists and sharded_xla
+# re-hoists per element inside the SPMD program, but both already price
+# n_hoist without the hint, so there the hint is merely inert.  All are
+# info severity: the math is always correct, only accounting MAY overstate.
+_LOOP_CAVEAT = ("loops single executions — the claimed dedup is only "
+                "delivered if the caller passes the same pre-hoisted "
+                "product per slot; repeated raw ciphertexts re-hoist "
+                "per element while the plan's hoist_bytes trusts the hint")
+_NO_DEDUP_SCHEDULES = {
+    "mo": ("info", _LOOP_CAVEAT),
+    "hoisted": ("info", _LOOP_CAVEAT),
+    "baseline": ("info", "never hoists — the hint is inert"),
+    "sharded_xla": ("info", "re-hoists per batch element inside the SPMD "
+                            "program — the hint is inert (and the plan "
+                            "already prices the per-element hoist)"),
+}
+
+
+def check_generation(prog, *, program: str) -> list:
+    """AR001: the owning context was invalidated after this compile."""
+    if prog._gen == prog.ctx._generation:
+        return []
+    return [Diagnostic(
+        rule="AR001", severity="error", program=program, stage="arena",
+        message=f"stale compiled program: context generation is "
+                f"{prog.ctx._generation}, program was compiled at "
+                f"{prog._gen} — its arena operands/slot tables are gone",
+        hint="recompile via compile_hlt/compile_hemm/compile_blockmm "
+             "after ctx.invalidate()/keygen()")]
+
+
+def _canonical(slots) -> bool:
+    """First-appearance numbering: slot ids appear as 0, 1, 2, … in order."""
+    seen: dict = {}
+    for s in slots:
+        if seen.setdefault(int(s), len(seen)) != int(s):
+            return False
+    return True
+
+
+def audit_hlt(run, *, program: str = "hlt") -> list:
+    """AR002/AR003/AR004 for one CompiledHLT (generation must be current —
+    run :func:`check_generation` first)."""
+    plan = run.plan
+    diags = []
+    batch = plan.batch if plan.batch is not None else 1
+
+    # AR003 — dedup claim vs what the schedule's execution path delivers
+    if plan.ct_slots is not None and plan.n_ct_slots < batch \
+            and plan.schedule in _NO_DEDUP_SCHEDULES:
+        severity, why = _NO_DEDUP_SCHEDULES[plan.schedule]
+        diags.append(Diagnostic(
+            rule="AR003", severity=severity, program=program,
+            stage=f"ct_slots[{plan.schedule}]",
+            message=f"ct_slots hint claims {plan.n_ct_slots} unique "
+                    f"ciphertexts over a batch of {batch}, but "
+                    f"schedule='{plan.schedule}' {why} — the claimed "
+                    f"hoist dedup will not happen",
+            hint="use schedule='pallas' or 'sharded' (identity-deduped "
+                 "hoisting), or drop the hint"))
+
+    if not plan.schedule.startswith("sharded"):
+        return diags
+
+    # AR002 — slot-table well-formedness against the plan
+    tables = run._slot_tables or {}
+    diag_tab = np.asarray(tables.get("diag"))
+    b_pad = int(diag_tab.shape[0]) if diag_tab.ndim else 0
+    n_ct = max(1, run.ctx.n_ct)
+    bad = []
+    if diag_tab.ndim != 1 or b_pad < batch or b_pad % n_ct:
+        bad.append(f"diag table shape {diag_tab.shape} is not a "
+                   f"1-D ct-axis multiple covering the batch "
+                   f"(batch {batch}, n_ct {n_ct})")
+    else:
+        if not np.issubdtype(diag_tab.dtype, np.integer):
+            bad.append(f"diag table dtype {diag_tab.dtype} is not integral")
+        elif diag_tab.min() < 0 or diag_tab.max() >= plan.n_diag_slots:
+            bad.append(f"diag slot ids outside [0, {plan.n_diag_slots})")
+        elif tuple(int(s) for s in diag_tab[:batch]) != plan.diag_slots:
+            bad.append("diag table disagrees with plan.diag_slots")
+    ct_tab = tables.get("ct")
+    if ct_tab is not None and plan.ct_slots is not None:
+        ct_np = np.asarray(ct_tab)
+        if ct_np.shape != (b_pad,):
+            bad.append(f"ct table shape {ct_np.shape} != ({b_pad},)")
+        elif ct_np.min() < 0 or ct_np.max() >= plan.n_ct_slots:
+            bad.append(f"ct slot ids outside [0, {plan.n_ct_slots})")
+        elif tuple(int(s) for s in ct_np[:batch]) != plan.ct_slots:
+            bad.append("ct table disagrees with plan.ct_slots")
+        elif not _canonical(plan.ct_slots):
+            bad.append("ct_slots hint is not first-appearance canonical")
+    for msg in bad:
+        diags.append(Diagnostic(
+            rule="AR002", severity="error", program=program,
+            stage="slot_tables", message=msg,
+            hint="slot tables are arena-built by hlt_dist.build_slot_tables"
+                 " — rebuild via compile_hlt, do not patch them in place"))
+
+    # AR004 — dedup layout falls back to element at call time
+    if plan.schedule == "sharded" and plan.n_ct_slots is not None and b_pad:
+        b_loc = b_pad // n_ct
+        if plan.n_ct_slots > b_loc:
+            diags.append(Diagnostic(
+                rule="AR004", severity="warning", program=program,
+                stage="ct_slots[sharded]",
+                message=f"dedup hint has {plan.n_ct_slots} unique "
+                        f"ciphertexts but a ct rank's batch share is only "
+                        f"{b_loc} — execution will fall back to the "
+                        f"per-element hoist layout",
+            hint="the fallback is correct but each rank hoists its local "
+                 "share; expect hoist_bytes_naive, not hoist_bytes"))
+    return diags

@@ -1,0 +1,87 @@
+"""Structured diagnostics shared by every verifier pass (DESIGN.md §6).
+
+A :class:`Diagnostic` carries a stable rule id (the DESIGN.md §6 catalog),
+a severity, the program/stage it anchors to, a human message and a fix
+hint.  ``verify.enforce`` turns error-severity diagnostics into a
+:class:`VerificationError` under ``verify="error"`` and into
+:class:`VerificationWarning` warnings under ``verify="warn"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+SEVERITIES = ("error", "warning", "info")
+
+# Rule catalog — ids are stable and documented in DESIGN.md §6.
+RULES = {
+    # level/scale tracker (analysis/level_scale.py)
+    "LS001": "level underflow: op consumes more levels than the ciphertext has",
+    "LS002": "scale mismatch between addends",
+    "LS003": "rescale past the end of the modulus chain",
+    "LS004": "level mismatch between operands of add/mult",
+    # jaxpr invariant linter (analysis/jaxpr_lint.py)
+    "JX001": "sole-collective invariant violated in the sharded program",
+    "JX002": "pallas_call missing from the fused datapath",
+    "JX003": "host round-trip (callback primitive) in the hot path",
+    # VMEM budget checker (analysis/vmem.py)
+    "VM001": "fused-kernel working set exceeds the VMEM budget",
+    # arena / aliasing auditor (analysis/arena.py)
+    "AR001": "stale compiled program: context generation advanced",
+    "AR002": "malformed slot table",
+    "AR003": "ct_slots dedup claim the schedule cannot deliver",
+    "AR004": "dedup hint exceeds the per-rank batch share (element fallback)",
+    # verifier plumbing
+    "VF000": "verifier internal error",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One verifier finding: rule id, severity, source program/stage,
+    message and a fix hint."""
+
+    rule: str                  # RULES key, e.g. "LS001"
+    severity: str              # "error" | "warning" | "info"
+    program: str               # "hlt" | "hemm" | "blockmm" | "trace"
+    stage: str                 # op/stage anchor, e.g. "step2/eps[3]"
+    message: str
+    hint: str = ""
+
+    def __post_init__(self):
+        assert self.rule in RULES, self.rule
+        assert self.severity in SEVERITIES, self.severity
+
+    def __str__(self) -> str:
+        s = f"{self.rule} [{self.severity}] {self.program}:{self.stage}: " \
+            f"{self.message}"
+        return s + (f" (fix: {self.hint})" if self.hint else "")
+
+
+def errors(diags: Iterable[Diagnostic]) -> list:
+    """The error-severity subset."""
+    return [d for d in diags if d.severity == "error"]
+
+
+def format_report(diags: Sequence[Diagnostic]) -> str:
+    """Multi-line report, errors first."""
+    if not diags:
+        return "no diagnostics"
+    order = {"error": 0, "warning": 1, "info": 2}
+    lines = [str(d) for d in sorted(diags, key=lambda d: order[d.severity])]
+    return "\n".join(lines)
+
+
+class VerificationWarning(UserWarning):
+    """Category for warn-mode diagnostics — suppress with
+    ``warnings.filterwarnings("ignore", category=VerificationWarning)``."""
+
+
+class VerificationError(RuntimeError):
+    """Raised by ``verify="error"`` compiles; ``.diagnostics`` holds every
+    finding (not only the errors that triggered the raise)."""
+
+    def __init__(self, diagnostics: Sequence[Diagnostic]):
+        self.diagnostics = tuple(diagnostics)
+        super().__init__("HE program verification failed:\n"
+                         + format_report(self.diagnostics))

@@ -1,0 +1,279 @@
+"""Symbolic CKKS level/scale tracker — the verifier's LS pass.
+
+Walks a program's op sequence (hoist → Automorph → KeyIP → DiagIP →
+merged ModDown+Rescale, then Mult/Rescale/Add accumulation) over a
+symbolic ``(level, scale, modulus-chain index)`` state per ciphertext
+slot, WITHOUT touching any polynomial data.  The arithmetic mirrors
+``core/ckks.py`` float-for-float (same expressions, same evaluation
+order), so a prediction can be compared EXACTLY against an executed
+ciphertext — the property test in ``tests/test_analysis.py`` does.
+
+Rules emitted (DESIGN.md §6): LS001 level underflow, LS002 scale mismatch
+at adds, LS003 rescale past the modulus chain, LS004 operand level
+mismatch.
+
+The ``trace_*`` helpers are the ``trace()`` API a future
+``compile_hemm_chain`` consumes (ROADMAP "consecutive HE MM chains"):
+``trace_chain`` proves a multi-hop Y = X·W1·W2·… fits the modulus chain
+before anything executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.analysis.diagnostics import Diagnostic
+
+# Addend scales are compared RELATIVELY: CKKS engineering treats scales
+# within ~2^-40 of each other as "equal" (HEAAN Demystified); our engine
+# takes max() at add, so a real mismatch silently skews the decode.
+DEFAULT_RTOL = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class CtState:
+    """Symbolic ciphertext state: current level ℓ (limbs 0..ℓ live) and
+    host-tracked scale.  ``chain_index`` is the modulus-chain index of the
+    prime the NEXT rescale folds out (== level)."""
+
+    level: int
+    scale: float
+
+    @property
+    def chain_index(self) -> int:
+        return self.level
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceStep:
+    """One op in a trace: the state AFTER the op."""
+
+    op: str                    # "hoist"|"automorph"|"keyip"|"diagip"|
+    #                            "moddown_rescale"|"mult"|"rescale"|"add"
+    stage: str                 # source anchor, e.g. "step2/eps[3]"
+    level: int
+    scale: float
+    chain_index: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """A completed symbolic execution: final state, per-op steps, findings."""
+
+    out: CtState
+    steps: tuple
+    diagnostics: tuple
+
+    @property
+    def ok(self) -> bool:
+        return not any(d.severity == "error" for d in self.diagnostics)
+
+
+class ScaleTracker:
+    """Symbolic interpreter over ``CtState``; accumulates steps/diagnostics.
+
+    One tracker spans a whole program (or a whole chain of programs): feed
+    an op's output state into the next op.  States are immutable, so
+    fan-out (one HLT output consumed by ``l`` Step-2 HLTs) is just reusing
+    the object.
+    """
+
+    def __init__(self, moduli: Sequence[float], *, rtol: float = DEFAULT_RTOL,
+                 program: str = "trace"):
+        self.moduli = [float(q) for q in moduli]   # chain, indexed by level
+        self.rtol = rtol
+        self.program = program
+        self.steps: list = []
+        self.diagnostics: list = []
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _emit(self, rule: str, stage: str, message: str, hint: str = "",
+              severity: str = "error") -> None:
+        self.diagnostics.append(Diagnostic(
+            rule=rule, severity=severity, program=self.program, stage=stage,
+            message=message, hint=hint))
+
+    def _step(self, op: str, stage: str, st: CtState) -> CtState:
+        self.steps.append(TraceStep(op=op, stage=stage, level=st.level,
+                                    scale=st.scale,
+                                    chain_index=st.chain_index))
+        return st
+
+    def _q(self, level: int) -> float:
+        """Chain prime at ``level`` (1.0 past the chain so an already
+        flagged underflow keeps tracing instead of crashing)."""
+        if 0 <= level < len(self.moduli):
+            return self.moduli[level]
+        return 1.0
+
+    # -- ops -----------------------------------------------------------------
+
+    def hlt(self, st: CtState, ds_scale: float, *, stage: str = "hlt"
+            ) -> CtState:
+        """One homomorphic linear transformation at ``st.level``.
+
+        hoist/Automorph/KeyIP preserve (level, scale); DiagIP multiplies by
+        the diagonal-set scale; the merged ModDown+Rescale folds out q_ℓ
+        and drops one level (``CompiledHLT._finish``:
+        ``scale_in * ds.scale / q_ℓ``).
+        """
+        if st.level < 1:
+            self._emit(
+                "LS001", stage,
+                f"HLT at level {st.level} — the merged ModDown+Rescale "
+                f"consumes one level, none left",
+                hint="start the program at a higher level or shorten the "
+                     "circuit (each HLT costs 1 level, hemm costs 3)")
+        self._step("hoist", stage, st)
+        self._step("automorph", stage, st)
+        self._step("keyip", stage, st)
+        mid = CtState(st.level, st.scale * ds_scale)
+        self._step("diagip", stage, mid)
+        out = CtState(st.level - 1, mid.scale / self._q(st.level))
+        return self._step("moddown_rescale", stage, out)
+
+    def mult(self, a: CtState, b: CtState, *, stage: str = "mult") -> CtState:
+        """ct×ct with relinearization, NO rescale (``CkksEngine.mult``)."""
+        if a.level != b.level:
+            self._emit("LS004", stage,
+                       f"mult operands at different levels "
+                       f"({a.level} vs {b.level})",
+                       hint="mod-down the higher operand first")
+        out = CtState(min(a.level, b.level), a.scale * b.scale)
+        return self._step("mult", stage, out)
+
+    def rescale(self, st: CtState, *, stage: str = "rescale") -> CtState:
+        """Fold out q_ℓ, drop one level (``CkksEngine.rescale``)."""
+        if st.level < 1:
+            self._emit(
+                "LS003", stage,
+                f"rescale at level {st.level} would drop past the start of "
+                f"the modulus chain",
+                hint="the circuit is deeper than the chain; raise L or "
+                     "start at a higher level")
+        out = CtState(st.level - 1, st.scale / self._q(st.level))
+        return self._step("rescale", stage, out)
+
+    def add(self, a: CtState, b: CtState, *, stage: str = "add") -> CtState:
+        """ct+ct (``CkksEngine.add``: result scale = max of the addends —
+        which is only meaningful when they agree)."""
+        if a.level != b.level:
+            self._emit("LS004", stage,
+                       f"addends at different levels ({a.level} vs "
+                       f"{b.level})",
+                       hint="mod-down the higher addend first")
+        denom = max(abs(a.scale), abs(b.scale), 1e-300)
+        if abs(a.scale - b.scale) > self.rtol * denom:
+            self._emit(
+                "LS002", stage,
+                f"addend scales differ: {a.scale:.6g} vs {b.scale:.6g} "
+                f"(rel {abs(a.scale - b.scale) / denom:.2e})",
+                hint="equalize diagonal-set scales so every accumulated "
+                     "product lands on the same scale")
+        out = CtState(min(a.level, b.level), max(a.scale, b.scale))
+        return self._step("add", stage, out)
+
+    def cmult(self, st: CtState, pt_scale: float, *, stage: str = "cmult"
+              ) -> CtState:
+        """ct×pt (``CkksEngine.cmult``): scale multiplies, level holds."""
+        return self._step("mult", stage, CtState(st.level,
+                                                 st.scale * pt_scale))
+
+    # -- composite programs --------------------------------------------------
+
+    def hemm(self, a: CtState, b: CtState, *, sigma_scale: float,
+             tau_scale: float, eps_scales: Sequence[float],
+             omega_scales: Sequence[float], add_fanin: int = 1,
+             stage: str = "hemm") -> CtState:
+        """One Algorithm-2 HE MM: Step-1 σ/τ HLTs, Step-2 ε/ω HLT pairs,
+        then the Mult·Rescale·Add accumulation over k (``HEMMProgram``;
+        depth 3).  ``add_fanin`` replicates each k's product — block MM
+        accumulates ``gl`` tile products per output tile per k."""
+        assert len(eps_scales) == len(omega_scales)
+        if a.level != b.level:
+            self._emit("LS004", f"{stage}/inputs",
+                       f"hemm inputs at different levels ({a.level} vs "
+                       f"{b.level})",
+                       hint="encrypt/mod-down both inputs to one level")
+        a0 = self.hlt(a, sigma_scale, stage=f"{stage}/step1/sigma")
+        b0 = self.hlt(b, tau_scale, stage=f"{stage}/step1/tau")
+        acc: Optional[CtState] = None
+        for k, (es, os_) in enumerate(zip(eps_scales, omega_scales, strict=True)):
+            ak = self.hlt(a0, es, stage=f"{stage}/step2/eps[{k}]")
+            bk = self.hlt(b0, os_, stage=f"{stage}/step2/omega[{k}]")
+            prod = self.mult(ak, bk, stage=f"{stage}/acc[{k}]")
+            prod = self.rescale(prod, stage=f"{stage}/acc[{k}]")
+            for _ in range(max(1, add_fanin)):
+                acc = prod if acc is None else \
+                    self.add(acc, prod, stage=f"{stage}/acc[{k}]")
+        return acc
+
+    def trace(self) -> Trace:
+        """Snapshot the tracker as an immutable :class:`Trace` (final state
+        = the last recorded step)."""
+        last = self.steps[-1]
+        return Trace(out=CtState(last.level, last.scale),
+                     steps=tuple(self.steps),
+                     diagnostics=tuple(self.diagnostics))
+
+
+# ---------------------------------------------------------------------------
+# trace() API — module-level conveniences over ScaleTracker
+# ---------------------------------------------------------------------------
+
+
+def trace_hlt(moduli: Sequence[float], *, level: int, scale: float,
+              ds_scale: float, stage: str = "hlt",
+              program: str = "hlt") -> Trace:
+    """Trace one HLT from ``(level, scale)`` through a diagonal set."""
+    t = ScaleTracker(moduli, program=program)
+    t.hlt(CtState(level, scale), ds_scale, stage=stage)
+    return t.trace()
+
+
+def trace_hemm(moduli: Sequence[float], *, level: int, scale_a: float,
+               scale_b: float, sigma_scale: float, tau_scale: float,
+               eps_scales: Sequence[float], omega_scales: Sequence[float],
+               add_fanin: int = 1, rtol: float = DEFAULT_RTOL,
+               program: str = "hemm") -> Trace:
+    """Trace one whole HE MM (Algorithm 2, depth 3) from input states
+    ``(level, scale_a)`` / ``(level, scale_b)``."""
+    t = ScaleTracker(moduli, rtol=rtol, program=program)
+    t.hemm(CtState(level, scale_a), CtState(level, scale_b),
+           sigma_scale=sigma_scale, tau_scale=tau_scale,
+           eps_scales=eps_scales, omega_scales=omega_scales,
+           add_fanin=add_fanin)
+    return t.trace()
+
+
+def _hop_scales(hop) -> dict:
+    """Scales of one chain hop: a ``core/hemm.py`` HeMMPlan (duck-typed via
+    its ``ds_*`` diagonal sets) or a plain dict of scales."""
+    if isinstance(hop, dict):
+        return hop
+    return dict(sigma_scale=hop.ds_sigma.scale, tau_scale=hop.ds_tau.scale,
+                eps_scales=[ds.scale for ds in hop.ds_eps],
+                omega_scales=[ds.scale for ds in hop.ds_omega])
+
+
+def trace_chain(moduli: Sequence[float], hops, *, level: int, scale: float,
+                weight_scale: Optional[float] = None,
+                rtol: float = DEFAULT_RTOL) -> Trace:
+    """Trace a consecutive HE MM chain Y = X·W1·W2·… (each hop one hemm,
+    depth 3), the ROADMAP "consecutive HE MM chains" precondition: the
+    trace proves at compile time that levels/rescales line up across hops
+    — or pinpoints the hop where the modulus chain runs out (LS001/LS003).
+
+    ``hops``: HeMMPlan objects (``plan_hemm``) or dicts with
+    ``sigma_scale``/``tau_scale``/``eps_scales``/``omega_scales``.  Each
+    hop's weight input is assumed freshly encrypted at the hop's input
+    level with ``weight_scale`` (default: ``scale``).
+    """
+    t = ScaleTracker(moduli, rtol=rtol, program="chain")
+    state = CtState(level, scale)
+    ws = scale if weight_scale is None else weight_scale
+    for h, hop in enumerate(hops):
+        state = t.hemm(state, CtState(state.level, ws),
+                       **_hop_scales(hop), stage=f"hop[{h}]")
+    return t.trace()

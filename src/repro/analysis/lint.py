@@ -1,0 +1,114 @@
+"""CLI: compile representative HE programs across the fame verification
+parameter sets and print the static verifier's diagnostics report.
+
+    PYTHONPATH=src python -m repro.analysis.lint [--schedules mo,pallas,...]
+        [--sets fame-s-rt,...] [--shape 4,3,5] [--grid 2,2,2] [--chain 3]
+
+For every parameter set (``configs/fame_sets.FAME_VERIFY_SETS``) the CLI
+compiles a hemm program per schedule plus one block-MM grid program (with
+an aliasing hint, exercising the slot-table audit), runs
+``verify_program`` on each, and additionally traces a consecutive HE MM
+chain until the modulus chain runs out — the compile-time proof the
+ROADMAP's ``compile_hemm_chain`` item needs.  Exit status 1 if any
+error-severity diagnostic is found (the CI job runs this).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.analysis.diagnostics import errors
+from repro.analysis.level_scale import trace_chain
+from repro.analysis.verify import verify_program
+from repro.configs.fame_sets import FAME_VERIFY_SETS
+from repro.core.ckks import CkksEngine
+from repro.core.compile import (HEContext, compile_blockmm, compile_hemm)
+from repro.core.hemm import plan_hemm
+from repro.core.hlt import SCHEDULES
+
+_DEFAULT_SCHEDULES = ("mo", "hoisted", "pallas", "sharded", "sharded_xla")
+
+
+def _ints(csv: str) -> tuple:
+    return tuple(int(x) for x in csv.split(","))
+
+
+def _report_row(name: str, program: str, schedule: str, diags,
+                verbose: bool) -> list:
+    errs = errors(diags)
+    warns = [d for d in diags if d.severity == "warning"]
+    infos = [d for d in diags if d.severity == "info"]
+    status = "FAIL" if errs else ("warn" if warns else "ok")
+    print(f"  {name:<12} {program:<8} {schedule:<12} {status:<5} "
+          f"{len(errs)} error(s), {len(warns)} warning(s), "
+          f"{len(infos)} note(s)")
+    shown = diags if verbose else errs
+    for d in shown:
+        print(f"    - {d}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static verification sweep over the fame parameter sets")
+    ap.add_argument("--sets", default=",".join(FAME_VERIFY_SETS),
+                    help="comma-separated FAME_VERIFY_SETS names")
+    ap.add_argument("--schedules", default=",".join(_DEFAULT_SCHEDULES),
+                    help="comma-separated schedules to compile")
+    ap.add_argument("--shape", default="4,3,5", type=_ints,
+                    help="hemm m,l,n")
+    ap.add_argument("--grid", default="2,2,2", type=_ints,
+                    help="block-MM gm,gl,gn tile grid")
+    ap.add_argument("--chain", default=8, type=int,
+                    help="hemm hops to trace for the chain-depth report")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print warnings and info, not only errors")
+    args = ap.parse_args(argv)
+
+    schedules = tuple(s for s in args.schedules.split(",") if s)
+    for s in schedules:
+        assert s in SCHEDULES, f"unknown schedule {s!r} (have {SCHEDULES})"
+    m, l, n = args.shape
+    all_errs = []
+    for name in args.sets.split(","):
+        params = FAME_VERIFY_SETS[name]
+        print(f"{name}: N=2^{params.logN} L={params.L} k={params.k} "
+              f"beta={params.beta}  shape {m}x{l}@{l}x{n}")
+        rng = np.random.default_rng(0)
+        # verify="off": the CLI collects diagnostics itself so one failing
+        # schedule cannot abort the sweep
+        ctx = HEContext(CkksEngine(params), verify="off")
+        plan = plan_hemm(ctx.eng, m, l, n)
+        ctx.keygen(rng, rot_steps=plan.rot_steps)
+        for schedule in schedules:
+            prog = compile_hemm(ctx, plan, schedule=schedule)
+            all_errs += _report_row(name, "hemm", schedule,
+                                    verify_program(prog), args.verbose)
+        # block MM with an aliasing hint (shared A row, shared B column)
+        gm, gl, gn = args.grid
+        prog = compile_blockmm(
+            ctx, plan, args.grid, schedule="pallas",
+            a_slots=[k for _ in range(gm) for k in range(gl)],
+            b_slots=[k for k in range(gl) for _ in range(gn)])
+        all_errs += _report_row(name, "blockmm", f"pallas {args.grid}",
+                                verify_program(prog), args.verbose)
+        # chain-depth report: how many consecutive hemm hops fit the chain
+        tr = trace_chain(ctx.eng.ctx.moduli_host, [plan] * args.chain,
+                         level=params.L, scale=params.scale)
+        fit = args.chain if tr.ok else params.L // 3
+        print(f"  {name:<12} chain    x{args.chain:<11} "
+              f"{'ok' if tr.ok else 'underflows'}  "
+              f"{fit} hop(s) fit L={params.L} "
+              f"({len(tr.steps)} ops traced)")
+    if all_errs:
+        print(f"\n{len(all_errs)} error diagnostic(s) — failing")
+        return 1
+    print("\nall programs verified clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,128 @@
+"""Verifier orchestration: run every applicable pass on a compiled program
+and enforce the context's ``verify`` mode.
+
+``verify_program(prog)`` is the public entry point (also what the CLI and
+tests call on an already-compiled program); ``enforce(ctx, prog)`` is the
+compile-time hook ``compile_hlt``/``compile_hemm``/``compile_blockmm``
+invoke — it raises :class:`VerificationError` on error-severity findings
+under ``verify="error"``, emits :class:`VerificationWarning` warnings
+under ``verify="warn"`` (an internal verifier crash degrades to a VF000
+warning there, so warn mode can never break a working compile), and is a
+no-op under ``verify="off"``.
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.analysis import arena, jaxpr_lint, vmem
+from repro.analysis.diagnostics import (Diagnostic, VerificationError,
+                                        VerificationWarning, errors)
+from repro.analysis.level_scale import CtState, ScaleTracker
+
+
+def _moduli(ctx):
+    return ctx.eng.ctx.moduli_host
+
+
+def verify_compiled_hlt(run, *, program: str = "hlt") -> list:
+    """All four passes over one CompiledHLT."""
+    diags = arena.check_generation(run, program=program)
+    if diags:
+        return diags        # stale: its operands/tables no longer exist
+    ctx, plan = run.ctx, run.plan
+    t = ScaleTracker(_moduli(ctx), program=program)
+    scale = ctx.eng.params.scale
+    for b, ds in enumerate(run._diags):
+        t.hlt(CtState(plan.level, scale), ds.scale, stage=f"hlt[{b}]")
+    diags += t.diagnostics
+    diags += vmem.check_vmem(ctx.eng.params, plan, program=program)
+    diags += arena.audit_hlt(run, program=program)
+    diags += jaxpr_lint.lint_compiled_hlt(run, program=program)
+    return diags
+
+
+def _component_hlts(step):
+    """A program's step attribute is one CompiledHLT (batched) or a tuple
+    of them (the non-batched reference compile)."""
+    return step if isinstance(step, tuple) else (step,)
+
+
+def verify_hemm(prog, *, components: bool = True) -> list:
+    """Whole-program level/scale trace of an HEMMProgram (+ its component
+    HLT passes when ``components`` — compile-time enforcement skips them
+    because each ``compile_hlt`` already enforced itself)."""
+    diags = arena.check_generation(prog, program="hemm")
+    if diags:
+        return diags
+    p, scale = prog.mm_plan, prog.ctx.eng.params.scale
+    t = ScaleTracker(_moduli(prog.ctx), program="hemm")
+    t.hemm(CtState(prog.plan.level, scale), CtState(prog.plan.level, scale),
+           sigma_scale=p.ds_sigma.scale, tau_scale=p.ds_tau.scale,
+           eps_scales=[ds.scale for ds in p.ds_eps],
+           omega_scales=[ds.scale for ds in p.ds_omega], stage="hemm")
+    diags += t.diagnostics
+    if components:
+        for step in (prog._step1, prog._step2):
+            for run in _component_hlts(step):
+                diags += verify_compiled_hlt(run, program="hemm")
+    return diags
+
+
+def verify_blockmm(prog, *, components: bool = True) -> list:
+    """Whole-program trace of a BlockMMProgram: per output tile the
+    accumulation adds ``gl`` products per k (``add_fanin``)."""
+    diags = arena.check_generation(prog, program="blockmm")
+    if diags:
+        return diags
+    p, scale = prog.mm_plan, prog.ctx.eng.params.scale
+    _, gl, _ = prog.plan.grid
+    t = ScaleTracker(_moduli(prog.ctx), program="blockmm")
+    t.hemm(CtState(prog.plan.level, scale), CtState(prog.plan.level, scale),
+           sigma_scale=p.ds_sigma.scale, tau_scale=p.ds_tau.scale,
+           eps_scales=[ds.scale for ds in p.ds_eps],
+           omega_scales=[ds.scale for ds in p.ds_omega], add_fanin=gl,
+           stage="blockmm")
+    diags += t.diagnostics
+    if components:
+        for run in (prog._step1, prog._step2):
+            diags += verify_compiled_hlt(run, program="blockmm")
+    return diags
+
+
+def verify_program(prog, *, components: bool = True) -> list:
+    """Dispatch on the compiled-program type; returns every finding."""
+    from repro.core import compile as compile_mod
+    if isinstance(prog, compile_mod.CompiledHLT):
+        return verify_compiled_hlt(prog)
+    if isinstance(prog, compile_mod.HEMMProgram):
+        return verify_hemm(prog, components=components)
+    if isinstance(prog, compile_mod.BlockMMProgram):
+        return verify_blockmm(prog, components=components)
+    raise TypeError(f"not a compiled HE program: {type(prog).__name__}")
+
+
+def enforce(ctx, prog) -> list:
+    """Compile-time hook honoring ``ctx.verify`` (see module docstring).
+    Program-level compiles skip component re-verification — each inner
+    ``compile_hlt`` enforced itself on the way here."""
+    mode = ctx.verify
+    if mode == "off":
+        return []
+    try:
+        diags = verify_program(prog, components=False)
+    except VerificationError:
+        raise
+    except Exception as e:                            # noqa: BLE001
+        if mode == "error":
+            raise
+        diags = [Diagnostic(
+            rule="VF000", severity="warning", program="verify",
+            stage="internal",
+            message=f"verifier pass crashed: {type(e).__name__}: {e}",
+            hint="report/fix the verifier; compile continued unchecked")]
+    if mode == "error" and errors(diags):
+        raise VerificationError(diags)
+    for d in diags:
+        if d.severity != "info":    # info findings surface via the CLI
+            warnings.warn(str(d), VerificationWarning, stacklevel=3)
+    return diags

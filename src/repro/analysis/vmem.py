@@ -1,0 +1,39 @@
+"""VMEM budget pass (VM001): the fused kernel's per-grid-step working set
+must fit ``vmem_headroom × VMEM_BYTES``.
+
+``pick_rotation_chunk`` chooses a fitting chunk by construction, so the
+pass only fires on an EXPLICIT ``rotation_chunk`` (or a headroom lowered
+after the fact) — exactly the case that today surfaces as a runtime OOM on
+hardware.  The footprint is evaluated forward via
+``costmodel.fused_working_set_bytes`` (the same
+``kernels/fused_hlt.working_set_rows`` formula the picker inverts).
+"""
+from __future__ import annotations
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.core.costmodel import (VMEM_BYTES, fused_working_set_bytes,
+                                  pick_rotation_chunk)
+
+
+def check_vmem(params, plan, *, program: str = "hlt") -> list:
+    """VM001 diagnostics for one HLTPlan (empty for non-fused schedules)."""
+    if plan.schedule not in ("pallas", "sharded"):
+        return []
+    ws = fused_working_set_bytes(params, nbeta=plan.nbeta, chunk=plan.chunk)
+    budget = plan.vmem_headroom * VMEM_BYTES
+    if ws <= budget:
+        return []
+    fit = pick_rotation_chunk(params, nbeta=plan.nbeta,
+                              headroom=plan.vmem_headroom)
+    return [Diagnostic(
+        rule="VM001", severity="error", program=program,
+        stage=f"pallas_call[chunk={plan.chunk}]",
+        message=(f"fused-kernel working set {ws / 2**20:.2f} MiB per grid "
+                 f"step exceeds the VMEM budget "
+                 f"{budget / 2**20:.2f} MiB "
+                 f"(headroom {plan.vmem_headroom} × 16 MiB) at "
+                 f"rotation chunk {plan.chunk}, β={plan.nbeta}, "
+                 f"N={params.N}"),
+        hint=(f"drop rotation_chunk to ≤ {max(1, fit)} (the "
+              f"pick_rotation_chunk bound) or raise "
+              f"HEContext(vmem_headroom=...)"))]

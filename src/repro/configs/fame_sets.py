@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.params import SET_A, SET_B, SET_C, HEParams
+from repro.core.params import SET_A, SET_B, SET_C, HEParams, toy_params
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,3 +48,16 @@ PAPER_FAME_AVG_SPEEDUP = 221.0
 PAPER_FAME_MAX_SPEEDUP = 1337.0      # 160-160-160 / Set-C
 
 HE_SETS = {"set-a": SET_A, "set-b": SET_B, "set-c": SET_C}
+
+# Runtime-scaled verification twins of the paper sets: same CHAIN STRUCTURE
+# knobs the verifier exercises (modulus-chain depth L, special-prime count k,
+# digit count β) at a CPU-runnable ring size, since SET_A/B/C keygen at
+# N = 2^15..2^16 is infeasible off-hardware.  These are what
+# ``python -m repro.analysis.lint`` sweeps and what tests/test_analysis.py
+# parameterizes over ("both fame parameter sets").
+FAME_VERIFY_SETS = {
+    "fame-s-rt": toy_params(logN=6, L=4, k=3, beta=2, scale_bits=26,
+                            name="fame-s-rt"),
+    "fame-m-rt": toy_params(logN=7, L=5, k=2, beta=3, scale_bits=26,
+                            name="fame-m-rt"),
+}

@@ -126,10 +126,21 @@ class HEContext:
     ``invalidate()`` drops the arena, the jitted pipelines and the compiled
     program memo; ``keygen()`` calls it so a re-keyed context can never serve
     Montgomery operands derived from the old keys.
+
+    ``verify`` selects the static-verifier mode (repro.analysis, DESIGN.md
+    §6) every compile runs through: ``"warn"`` (default) emits
+    VerificationWarning findings, ``"error"`` raises VerificationError on
+    error-severity findings, ``"off"`` skips verification entirely.
     """
 
+    VERIFY_MODES = ("error", "warn", "off")
+
     def __init__(self, eng: CkksEngine, keys: Optional[Keys] = None,
-                 mesh=None, vmem_headroom: Optional[float] = None):
+                 mesh=None, vmem_headroom: Optional[float] = None,
+                 verify: str = "warn"):
+        assert verify in self.VERIFY_MODES, \
+            f"verify={verify!r} not in {self.VERIFY_MODES}"
+        self.verify = verify
         self.eng = eng
         self.keys = keys
         self.arena = OperandArena()
@@ -161,9 +172,11 @@ class HEContext:
     @classmethod
     def create(cls, params, rng: np.random.Generator,
                rot_steps: Sequence[int] = (), mesh=None,
-               vmem_headroom: Optional[float] = None) -> "HEContext":
+               vmem_headroom: Optional[float] = None,
+               verify: str = "warn") -> "HEContext":
         """Build an engine from ``params`` and keygen in one call."""
-        ctx = cls(CkksEngine(params), mesh=mesh, vmem_headroom=vmem_headroom)
+        ctx = cls(CkksEngine(params), mesh=mesh, vmem_headroom=vmem_headroom,
+                  verify=verify)
         ctx.keygen(rng, rot_steps=rot_steps)
         return ctx
 
@@ -359,6 +372,18 @@ def _dedup_by_identity(items):
     return uniq, slots
 
 
+def _enforce_verify(ctx: HEContext, prog) -> None:
+    """Run the static verifier on a freshly compiled program per
+    ``ctx.verify`` (repro.analysis; no-op when "off").  Called BEFORE the
+    memo store so a rejected compile is never cached; the memo keys carry
+    ``ctx.verify`` so flipping the mode never returns a program that was
+    compiled under different checking."""
+    if ctx.verify == "off":
+        return
+    from repro.analysis import verify as _verify   # deferred: imports us
+    _verify.enforce(ctx, prog)
+
+
 def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
                 level: Optional[int] = None, batch: Optional[int] = None,
                 schedule: Optional[str] = None,
@@ -413,7 +438,7 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
     sharded = schedule.startswith("sharded")
 
     memo_key = ("hlt", schedule, level, batch, rotation_chunk, ct_slots,
-                tuple(_StrongKey(ds) for ds in diag_list))
+                ctx.verify, tuple(_StrongKey(ds) for ds in diag_list))
     hit = ctx._compiled.get(memo_key)
     if hit is not None:
         return hit
@@ -510,6 +535,7 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
         hoist_bytes_naive=0 if schedule == "baseline" else h_unit * ctb)
     run = CompiledHLT(ctx, plan, tuple(diag_list), tuple(uniq), operands,
                       sharded_tabs=sharded_tabs, slot_tables=slot_tables)
+    _enforce_verify(ctx, run)
     ctx._compiled[memo_key] = run
     return run
 
@@ -545,7 +571,8 @@ class CompiledHLT:
         cts = [(i, it) for i, it in enumerate(uniq)
                if not isinstance(it, Hoisted)]
         hoisted = list(uniq)
-        for (i, _), h in zip(cts, hoist_batched(eng, [it for _, it in cts])):
+        for (i, _), h in zip(cts, hoist_batched(eng, [it for _, it in cts]),
+                             strict=True):
             hoisted[i] = h
         for h in hoisted:
             assert h.level == self.plan.level, (h.level, self.plan.level)
@@ -575,7 +602,7 @@ class CompiledHLT:
             return self._run_batched_pallas(items)
         # reference schedules: loop of single executions (oracle path)
         return [self._run_single(it, ds, None)
-                for it, ds in zip(items, self._diags)]
+                for it, ds in zip(items, self._diags, strict=True)]
 
     def _run_single(self, item, ds: DiagSet, operands) -> Ciphertext:
         ctx, eng, plan = self.ctx, self.ctx.eng, self.plan
@@ -681,7 +708,7 @@ class CompiledHLT:
         out0, out1 = fn(args)
         lvl = plan.level
         return [self._finish(out0[b, :lvl], out1[b, :lvl], it.scale, ds)
-                for b, (it, ds) in enumerate(zip(items, self._diags))]
+                for b, (it, ds) in enumerate(zip(items, self._diags, strict=True))]
 
     def sharded_hlo(self, items) -> str:
         """Optimized HLO text of the sharded SPMD program for this batch —
@@ -845,7 +872,7 @@ def compile_hemm(ctx: HEContext, plan, *, level: Optional[int] = None,
         batched = schedule in ("pallas", "sharded", "sharded_xla")
     batched = batched and schedule != "baseline"
     memo_key = ("hemm", _StrongKey(plan), schedule, level, rotation_chunk,
-                batched)
+                batched, ctx.verify)
     hit = ctx._compiled.get(memo_key)
     if hit is not None:
         return hit
@@ -873,6 +900,7 @@ def compile_hemm(ctx: HEContext, plan, *, level: Optional[int] = None,
         HEMMPlan(m=plan.m, l=plan.l, n=plan.n, schedule=schedule, level=level,
                  batched=batched, step1=s1_plan, step2=s2_plan),
         step1, step2)
+    _enforce_verify(ctx, prog)
     ctx._compiled[memo_key] = prog
     return prog
 
@@ -1072,7 +1100,7 @@ def compile_blockmm(ctx: HEContext, plan, grid, *,
             ctb=plan.l * (nA + nB), n_uniq=len(set(slots1)))
 
     memo_key = ("blockmm", _StrongKey(plan), grid, schedule, level,
-                rotation_chunk, a_slots, b_slots)
+                rotation_chunk, a_slots, b_slots, ctx.verify)
     hit = ctx._compiled.get(memo_key)
     if hit is not None:
         return hit
@@ -1097,5 +1125,6 @@ def compile_blockmm(ctx: HEContext, plan, grid, *,
                     schedule=schedule, level=level,
                     step1=step1.plan, step2=step2.plan),
         step1, step2)
+    _enforce_verify(ctx, prog)
     ctx._compiled[memo_key] = prog
     return prog

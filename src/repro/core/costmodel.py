@@ -65,11 +65,26 @@ def pick_rotation_chunk(params: "HEParams", nbeta: int | None = None,
     """
     nbeta = params.beta if nbeta is None else nbeta
     headroom = VMEM_HEADROOM if headroom is None else headroom
+    from repro.kernels.fused_hlt import working_set_rows
     row = 4.0 * params.N
     budget_rows = headroom * vmem_bytes / row
-    resident = nbeta + 4
-    per_rotation = 2 * nbeta + 2
+    resident = working_set_rows(nbeta, 0)
+    per_rotation = working_set_rows(nbeta, 1) - resident
     return max(1, int((budget_rows - resident) // per_rotation))
+
+
+def fused_working_set_bytes(params: "HEParams", *, nbeta: int,
+                            chunk: int) -> int:
+    """Forward evaluation of the fused kernel's per-grid-step working set
+    (``kernels/fused_hlt.working_set_rows`` × one N-coefficient u32 row) —
+    what ``pick_rotation_chunk`` inverts.  The verifier's VMEM pass
+    (``repro.analysis.vmem``, VM001) fails a compile whose explicit
+    ``rotation_chunk`` pushes this past ``vmem_headroom × VMEM_BYTES``;
+    under ``schedule="sharded"`` the same bound applies per model rank
+    (the kernel sees the limb-row shard, so the per-row set is unchanged).
+    """
+    from repro.kernels.fused_hlt import working_set_rows
+    return int(working_set_rows(nbeta, chunk) * 4 * params.N)
 
 
 def sharded_collective_bytes(params: "HEParams", *, n_model: int = 1,
@@ -337,7 +352,9 @@ class CostModel:
         per_rot = 2.0 * (ext + self.b_ct(p.L + p.k + 1))   # spill + refill
         return 2.0 * self.b_ct() + d * per_rot
 
-    def mo_hlt_traffic(self, d: int, sram_bytes: float) -> float:
+    # d is unused by design — MO fuses all d rotations on-chip; the signature
+    # mirrors baseline_hlt_traffic so the two are interchangeable.
+    def mo_hlt_traffic(self, d: int, sram_bytes: float) -> float:  # noqa: ARG002
         """MO-HLT: input Ct read + output Ct write; only the unfused BaseConv
         stages (ModUp/ModDown) round-trip limbs when the Ct exceeds on-chip."""
         base = 2.0 * self.b_ct()

@@ -516,6 +516,17 @@ def build_slot_tables(diag_slots, ct_slots, b_pad: int) -> dict:
     return out
 
 
+def expected_collectives(tabs: ShardTables) -> dict:
+    """The sharded program's collective CONTRACT, owned next to the program
+    builder and consumed by the verifier (``repro.analysis.jaxpr_lint``,
+    rule JX001): the merged ModDown+Rescale BaseConv is the ONLY collective
+    — one exact one-contributor-per-row psum per output poly (c0', c1') when
+    the limb axis is really sharded, none at all when n_model == 1 (the
+    body is then emitted without shard_map/psum), and never any other
+    collective primitive."""
+    return {"psum": 2 if tabs.n_model > 1 else 0}
+
+
 def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
                         fp_dtype=jnp.float64, unroll: int = 1,
                         datapath: str = "pallas", chunk: Optional[int] = None,
@@ -753,7 +764,7 @@ def lower_mo_hlt_spmd(params: HEParams, mesh, rules, d: int = 127,
     in_sh = tuple(sh(ax, a.shape) for ax, a in zip(
         [("ct_batch", "limbs", None), ("ct_batch", "limbs", None),
          (None, "limbs", None), (None, None, "limbs", None),
-         (None, None, "limbs", None)], args))
+         (None, None, "limbs", None)], args, strict=True))
     out_shape = (ctb, L, N)
     out_sh = (sh(("ct_batch", "limbs", None), out_shape),) * 2
     return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)

@@ -44,7 +44,7 @@ class RnsTools:
             for q in qs:
                 D *= q
             hat = [D // q for q in qs]
-            hat_inv = np.array([mm.host_inv(h % q, q) for h, q in zip(hat, qs)],
+            hat_inv = np.array([mm.host_inv(h % q, q) for h, q in zip(hat, qs, strict=True)],
                                dtype=np.uint32)[:, None]
             W = np.array([[h % t for t in qt] for h in hat],
                          dtype=np.uint64).T          # (|T|, |S|)

@@ -94,3 +94,65 @@ def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
 def dominant_term(terms: dict) -> str:
     return max(("compute_s", "memory_s", "collective_s"),
                key=lambda k: terms[k])
+
+
+# --- jaxpr walking (the verifier's JX pass; repro.analysis.jaxpr_lint) ------
+
+#: Cross-device jaxpr primitives besides the psum family.  ``pbroadcast``
+#: is deliberately absent: shard_map inserts it as a device-LOCAL
+#: replication marker, it moves no bytes.
+COLLECTIVE_JAXPR_PRIMS = frozenset({
+    "all_gather", "all_to_all", "ppermute", "pmax", "pmin",
+    "reduce_scatter", "psum_scatter",
+})
+
+
+def _sub_jaxprs(value):
+    """Jaxpr objects nested inside one eqn param value (pjit's ``jaxpr``,
+    shard_map's ``jaxpr``, cond's ``branches`` list, ...), duck-typed so
+    both Jaxpr and ClosedJaxpr — and jax-version renames — are covered."""
+    out = []
+    for v in value if isinstance(value, (list, tuple)) else (value,):
+        if hasattr(v, "jaxpr"):          # ClosedJaxpr -> Jaxpr
+            v = v.jaxpr
+        if hasattr(v, "eqns"):
+            out.append(v)
+    return out
+
+
+def iter_jaxpr_eqns(jaxpr):
+    """Yield every eqn of ``jaxpr`` (Jaxpr or ClosedJaxpr) recursively,
+    descending through pjit / shard_map / cond / scan sub-jaxprs."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from iter_jaxpr_eqns(sub)
+
+
+def jaxpr_primitive_counts(jaxpr) -> dict:
+    """Recursive primitive-name histogram of a (Closed)Jaxpr."""
+    counts = defaultdict(int)
+    for eqn in iter_jaxpr_eqns(jaxpr):
+        counts[eqn.primitive.name] += 1
+    return dict(counts)
+
+
+def jaxpr_collective_census(jaxpr) -> dict:
+    """Collective/hot-path census of a traced program, consumed by the
+    verifier's jaxpr pass: ``psums`` counts the psum family (the name
+    gained suffixed variants across jax versions), ``other_collectives``
+    maps any non-psum collective primitive to its count, ``pallas_calls``
+    counts fused-kernel launches and ``callbacks`` counts host round-trip
+    primitives (pure_callback / io_callback / debug_callback)."""
+    counts = jaxpr_primitive_counts(jaxpr)
+    return {
+        "psums": sum(v for k, v in counts.items() if k.startswith("psum")
+                     and k not in COLLECTIVE_JAXPR_PRIMS),
+        "other_collectives": {k: v for k, v in counts.items()
+                              if k in COLLECTIVE_JAXPR_PRIMS},
+        "pallas_calls": counts.get("pallas_call", 0),
+        "callbacks": {k: v for k, v in counts.items() if "callback" in k},
+    }

@@ -198,14 +198,14 @@ def analyze(hlo_text: str) -> HloCost:
     sliced_params: dict[str, dict[int, int]] = {}
     for cname, items in comps.items():
         pidx: dict[str, int] = {}
-        for ins, operand_names, attrs, out_shape in items:
+        for ins, _operands, _attrs, _shape in items:
             if ins.op == "parameter":
                 m = re.search(r"parameter\((\d+)\)", ins.line)
                 name = ins.line.partition("=")[0].strip().lstrip("%")
                 if m:
                     pidx[name] = int(m.group(1))
         sl: dict[int, int] = {}
-        for ins, operand_names, attrs, out_shape in items:
+        for ins, operand_names, _attrs, _shape in items:
             if ins.op in ("dynamic-slice", "gather") and operand_names:
                 src = operand_names[0]
                 if src in pidx:
@@ -258,7 +258,7 @@ def analyze(hlo_text: str) -> HloCost:
         return out
 
     trip_of_body: dict[str, int] = {}
-    for cname, instrs in comps.items():
+    for instrs in comps.values():
         for ins in instrs:
             if ins.op == "while" and len(ins.called) >= 2:
                 cond, body = ins.called[0], ins.called[1]

@@ -84,7 +84,7 @@ class ShardingRules:
         spec = tuple(
             ax if ax is None or dim % logical_axis_size(self, ax) == 0
             else None
-            for ax, dim in zip(logical, x.shape))
+            for ax, dim in zip(logical, x.shape, strict=False))
         return jax.lax.with_sharding_constraint(x, self.sharding(*spec))
 
 
@@ -105,7 +105,7 @@ def logical_axis_size(rules: "ShardingRules", ax: Optional[str]) -> int:
 def sanitize_spec(rules: "ShardingRules", axes, shape) -> tuple:
     """Drop logical axes that don't divide their dimension (replicate them)."""
     return tuple(ax if ax and dim % logical_axis_size(rules, ax) == 0 else None
-                 for ax, dim in zip(axes, shape))
+                 for ax, dim in zip(axes, shape, strict=False))
 
 
 def make_rules(mesh: Optional[Mesh] = None, overrides: Optional[dict] = None,

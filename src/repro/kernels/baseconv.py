@@ -45,10 +45,10 @@ def baseconv(x, hat_inv_m, q_own, qneg_own, W_m, D_mod_m, inv_d, q_gen,
     ns, N = x.shape
     nt = W_m.shape[0]
     block = min(block, N)
-    src = pl.BlockSpec((ns, block), lambda t, j: (0, j))
-    scol = pl.BlockSpec((ns, 1), lambda t, j: (0, 0))
-    wrow = pl.BlockSpec((1, ns), lambda t, j: (t, 0))
-    tcol = pl.BlockSpec((1, 1), lambda t, j: (t, 0))
+    src = pl.BlockSpec((ns, block), lambda _t, j: (0, j))
+    scol = pl.BlockSpec((ns, 1), lambda _t, _j: (0, 0))
+    wrow = pl.BlockSpec((1, ns), lambda t, _j: (t, 0))
+    tcol = pl.BlockSpec((1, 1), lambda t, _j: (t, 0))
     out = pl.BlockSpec((1, block), lambda t, j: (t, j))
     return pl.pallas_call(
         functools.partial(_baseconv_kernel, ns=ns),

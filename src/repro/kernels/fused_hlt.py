@@ -44,6 +44,20 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import modmath as mm
 
 
+def working_set_rows(nbeta: int, chunk: int) -> int:
+    """Rows of N u32 coefficients resident per grid step (docstring table):
+    β digit rows + c0e/c1e + the two accumulator rows stay put, and each of
+    the ``chunk`` rotations streams one diagonal row, one perm-table row
+    (i32 — same bytes) and 2β rot-key rows.
+
+    The single source of truth for the VMEM budget: ``core/costmodel.py``
+    ``pick_rotation_chunk`` inverts it to choose ``chunk`` and the verifier
+    (``repro.analysis.vmem``, rule VM001) evaluates it forward to reject an
+    explicit ``rotation_chunk`` that cannot fit.
+    """
+    return (nbeta + 4) + chunk * (2 * nbeta + 2)
+
+
 def _rot_chunk_body(a0, a1, dig, c0e, c1e, u, rk0, rk1, perms, ids, q, qneg,
                     *, nbeta: int, chunk: int):
     """Shared rotation-inner loop: dig (β, N) resident; u/perms (chunk, N);
@@ -101,14 +115,14 @@ def fused_hlt(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id, q32, qneg, *,
     chunk = min(chunk, d)
     assert d % chunk == 0, (d, chunk)
     grid = (M, d // chunk)
-    dig_s = pl.BlockSpec((nbeta, 1, N), lambda i, r: (0, i, 0))
-    vec_s = pl.BlockSpec((1, N), lambda i, r: (i, 0))
+    dig_s = pl.BlockSpec((nbeta, 1, N), lambda i, _r: (0, i, 0))
+    vec_s = pl.BlockSpec((1, N), lambda i, _r: (i, 0))
     u_s = pl.BlockSpec((chunk, 1, N), lambda i, r: (r, i, 0))
     rk_s = pl.BlockSpec((chunk, nbeta, 1, N), lambda i, r: (r, 0, i, 0))
-    pm_s = pl.BlockSpec((chunk, N), lambda i, r: (r, 0))
-    id_s = pl.BlockSpec((chunk, 1), lambda i, r: (r, 0))
-    c_s = pl.BlockSpec((1, 1), lambda i, r: (i, 0))
-    out_s = pl.BlockSpec((1, N), lambda i, r: (i, 0))
+    pm_s = pl.BlockSpec((chunk, N), lambda _i, r: (r, 0))
+    id_s = pl.BlockSpec((chunk, 1), lambda _i, r: (r, 0))
+    c_s = pl.BlockSpec((1, 1), lambda i, _r: (i, 0))
+    out_s = pl.BlockSpec((1, N), lambda i, _r: (i, 0))
     return pl.pallas_call(
         functools.partial(_fused_kernel, nbeta=nbeta, chunk=chunk),
         grid=grid,
@@ -156,15 +170,15 @@ def fused_hlt_batched(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id, q32,
     chunk = min(chunk, d)
     assert d % chunk == 0, (d, chunk)
     grid = (B, M, d // chunk)
-    dig_s = pl.BlockSpec((1, nbeta, 1, N), lambda b, i, r: (b, 0, i, 0))
-    vec_s = pl.BlockSpec((1, 1, N), lambda b, i, r: (b, i, 0))
+    dig_s = pl.BlockSpec((1, nbeta, 1, N), lambda b, i, _r: (b, 0, i, 0))
+    vec_s = pl.BlockSpec((1, 1, N), lambda b, i, _r: (b, i, 0))
     u_s = pl.BlockSpec((1, chunk, 1, N), lambda b, i, r: (b, r, i, 0))
     rk_s = pl.BlockSpec((1, chunk, nbeta, 1, N),
                         lambda b, i, r: (b, r, 0, i, 0))
-    pm_s = pl.BlockSpec((1, chunk, N), lambda b, i, r: (b, r, 0))
-    id_s = pl.BlockSpec((1, chunk, 1), lambda b, i, r: (b, r, 0))
-    c_s = pl.BlockSpec((1, 1), lambda b, i, r: (i, 0))
-    out_s = pl.BlockSpec((1, 1, N), lambda b, i, r: (b, i, 0))
+    pm_s = pl.BlockSpec((1, chunk, N), lambda b, _i, r: (b, r, 0))
+    id_s = pl.BlockSpec((1, chunk, 1), lambda b, _i, r: (b, r, 0))
+    c_s = pl.BlockSpec((1, 1), lambda _b, i, _r: (i, 0))
+    out_s = pl.BlockSpec((1, 1, N), lambda b, i, _r: (b, i, 0))
     return pl.pallas_call(
         functools.partial(_fused_kernel_batched, nbeta=nbeta, chunk=chunk),
         grid=grid,
@@ -228,16 +242,16 @@ def fused_hlt_indexed(digits, c0e, c1e, u_mont, rk0, rk1, perms, is_id,
     assert diag_slots.shape == (B,), (diag_slots.shape, B)
     grid = (B, M, d // chunk)
     dig_s = pl.BlockSpec((1, nbeta, 1, N),
-                         lambda b, i, r, cts, dgs: (cts[b], 0, i, 0))
-    vec_s = pl.BlockSpec((1, 1, N), lambda b, i, r, cts, dgs: (cts[b], i, 0))
+                         lambda b, i, _r, cts, _dgs: (cts[b], 0, i, 0))
+    vec_s = pl.BlockSpec((1, 1, N), lambda b, i, _r, cts, _dgs: (cts[b], i, 0))
     u_s = pl.BlockSpec((1, chunk, 1, N),
-                       lambda b, i, r, cts, dgs: (dgs[b], r, i, 0))
+                       lambda b, i, r, _cts, dgs: (dgs[b], r, i, 0))
     rk_s = pl.BlockSpec((1, chunk, nbeta, 1, N),
-                        lambda b, i, r, cts, dgs: (dgs[b], r, 0, i, 0))
-    pm_s = pl.BlockSpec((1, chunk, N), lambda b, i, r, cts, dgs: (dgs[b], r, 0))
-    id_s = pl.BlockSpec((1, chunk, 1), lambda b, i, r, cts, dgs: (dgs[b], r, 0))
-    c_s = pl.BlockSpec((1, 1), lambda b, i, r, cts, dgs: (i, 0))
-    out_s = pl.BlockSpec((1, 1, N), lambda b, i, r, cts, dgs: (b, i, 0))
+                        lambda b, i, r, _cts, dgs: (dgs[b], r, 0, i, 0))
+    pm_s = pl.BlockSpec((1, chunk, N), lambda b, _i, r, _cts, dgs: (dgs[b], r, 0))
+    id_s = pl.BlockSpec((1, chunk, 1), lambda b, _i, r, _cts, dgs: (dgs[b], r, 0))
+    c_s = pl.BlockSpec((1, 1), lambda _b, i, _r, _cts, _dgs: (i, 0))
+    out_s = pl.BlockSpec((1, 1, N), lambda b, i, _r, _cts, _dgs: (b, i, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,

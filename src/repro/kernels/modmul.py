@@ -31,7 +31,7 @@ def _modadd_kernel(x_ref, y_ref, q_ref, o_ref):
 
 def _specs(block):
     data = pl.BlockSpec((1, block), lambda i, j: (i, j))
-    const = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    const = pl.BlockSpec((1, 1), lambda i, _j: (i, 0))
     return data, const
 
 

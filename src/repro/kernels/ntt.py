@@ -48,8 +48,7 @@ def _intt_body(x, tw, ninv, q, qneg, N):
     return mm.montmul(x, ninv, q, qneg)
 
 
-def _ntt_kernel(x_ref, tw_ref, q_ref, qneg_ref, o_ref, *, N, inverse,
-                ninv_ref=None):
+def _ntt_kernel(x_ref, tw_ref, q_ref, qneg_ref, o_ref, *, N):
     x = x_ref[0, 0, :]
     tw = tw_ref[0, :]
     q = q_ref[0, 0]
@@ -72,10 +71,10 @@ def ntt(x, psi_m, q32, qneg, *, interpret: bool = True):
     q32/qneg: (M, 1). Returns bit-reversed eval order, std domain."""
     B, M, N = x.shape
     poly = pl.BlockSpec((1, 1, N), lambda b, i: (b, i, 0))
-    tw = pl.BlockSpec((1, N), lambda b, i: (i, 0))
-    const = pl.BlockSpec((1, 1), lambda b, i: (i, 0))
+    tw = pl.BlockSpec((1, N), lambda _b, i: (i, 0))
+    const = pl.BlockSpec((1, 1), lambda _b, i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_ntt_kernel, N=N, inverse=False),
+        functools.partial(_ntt_kernel, N=N),
         grid=(B, M),
         in_specs=[poly, tw, const, const],
         out_specs=poly,
@@ -88,8 +87,8 @@ def ntt(x, psi_m, q32, qneg, *, interpret: bool = True):
 def intt(x, psii_m, ninv_m, q32, qneg, *, interpret: bool = True):
     B, M, N = x.shape
     poly = pl.BlockSpec((1, 1, N), lambda b, i: (b, i, 0))
-    tw = pl.BlockSpec((1, N), lambda b, i: (i, 0))
-    const = pl.BlockSpec((1, 1), lambda b, i: (i, 0))
+    tw = pl.BlockSpec((1, N), lambda _b, i: (i, 0))
+    const = pl.BlockSpec((1, 1), lambda _b, i: (i, 0))
     return pl.pallas_call(
         functools.partial(_intt_kernel, N=N),
         grid=(B, M),

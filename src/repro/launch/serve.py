@@ -35,7 +35,7 @@ def main():
         batcher = ContinuousBatcher(
             cfg, ServeConfig(max_batch=4, max_len=128), params)
         rng = np.random.default_rng(0)
-        for r in range(args.requests):
+        for _ in range(args.requests):
             batcher.submit(
                 rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
                 max_new=args.max_new)

@@ -109,7 +109,7 @@ def _block_forward(cfg: ModelConfig, p, x, positions, *, frontend=None,
         states = []
         for i, sp in enumerate(p["ssm"]):
             st = None if cache is None else jax.tree.map(
-                lambda c: c[i], cache["ssm"])
+                lambda c, i=i: c[i], cache["ssm"])
             h, new_st = ssm_mod.ssm_forward(
                 cfg, sp, rmsnorm(x, sp["ln"], cfg.norm_eps), state=st)
             x = x + h
@@ -129,7 +129,7 @@ def _block_forward(cfg: ModelConfig, p, x, positions, *, frontend=None,
         kvs = []
         for i, ap in enumerate(p["attn_layers"]):
             kv = None if cache is None else jax.tree.map(
-                lambda c: c[i], cache["kv"])
+                lambda c, i=i: c[i], cache["kv"])
             x, new_kv, a = _attn_sublayer(cfg, ap, x, positions,
                                           kv_cache=kv, cache_len=cache_len)
             aux = aux + a

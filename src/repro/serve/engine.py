@@ -118,7 +118,7 @@ def serve_decode_step(cfg: ModelConfig, params, token, cache, pos):
     return tf.decode_step(cfg, params, token, cache, pos)
 
 
-def make_sharded_serve_steps(cfg: ModelConfig, mesh, params_shapes,
+def make_sharded_serve_steps(cfg: ModelConfig, _mesh, params_shapes,
                              batch: int, max_len: int):
     rules = get_rules()
     from repro.train.train_step import param_shardings
@@ -232,7 +232,7 @@ class ContinuousBatcher:
                 logits, cache1 = tf.prefill(
                     self.cfg, self.params, req["prompt"][None], cache1)
                 self.cache = jax.tree.map(
-                    lambda c, c1: c.at[:, :, i:i + 1].set(c1), self.cache,
+                    lambda c, c1, i=i: c.at[:, :, i:i + 1].set(c1), self.cache,
                     cache1)
                 tok = self._sample(np.asarray(logits[0, -1]))
                 self.results[req["id"]].append(tok)

@@ -97,7 +97,8 @@ class SessionPool:
 
     def __init__(self, params: HEParams, *, tile: int = 8,
                  max_live: int = 4, schedule: Optional[str] = None,
-                 rotation_chunk: Optional[int] = None, mesh=None):
+                 rotation_chunk: Optional[int] = None, mesh=None,
+                 verify: str = "warn"):
         from repro.secure import SecureMatmulEngine   # avoid import cycle
         self.params = params
         self.tile = tile
@@ -105,6 +106,7 @@ class SessionPool:
         self.schedule = schedule
         self.rotation_chunk = rotation_chunk
         self.mesh = mesh
+        self.verify = verify            # static-verifier mode per session ctx
         self.eng = CkksEngine(params)   # shared: key-independent precompute
         self._engine_cls = SecureMatmulEngine
         self._sessions: dict = {}       # tenant -> TenantSession (LRU order)
@@ -129,7 +131,7 @@ class SessionPool:
 
     def _create(self, tenant: str, rng: np.random.Generator) -> TenantSession:
         from repro.secure import SecureLinear
-        ctx = HEContext(self.eng, mesh=self.mesh)
+        ctx = HEContext(self.eng, mesh=self.mesh, verify=self.verify)
         sess = TenantSession(tenant, ctx)
         sess.engine = self._engine_cls(
             self.params, tile=self.tile, schedule=self.schedule,
@@ -170,7 +172,10 @@ class HEProgramCache:
     """LRU cache over ``compile_blockmm`` keyed by shape, not aliasing.
 
     Key: (tenant, tile m/l/n, grid, level, schedule, rotation_chunk,
-    mesh factorization) — everything that changes the compiled pipelines.
+    mesh factorization, verify mode) — everything that changes the
+    compiled pipelines or the checking they were admitted under.
+    Toggling ``ctx.verify`` must never return a program compiled under
+    different verification, so the mode is part of the key.
     The per-step aliasing pattern (which requests share a prompt) is
     deliberately NOT in the key: BlockMMProgram re-derives aliasing from
     object identity at call time, so one cached program is bit-exact for
@@ -195,7 +200,7 @@ class HEProgramCache:
         """The serving entry point to compile_blockmm (counted)."""
         ctx = sess.ctx
         key = (sess.tenant, plan.m, plan.l, plan.n, tuple(grid), level,
-               schedule, rotation_chunk, ctx.n_model, ctx.n_ct)
+               schedule, rotation_chunk, ctx.n_model, ctx.n_ct, ctx.verify)
         hit = self._entries.pop(key, None)
         if hit is not None and hit[1] == ctx._generation:
             self.hits += 1

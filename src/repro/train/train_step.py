@@ -79,7 +79,7 @@ def train_step(cfg: ModelConfig, tcfg: TrainConfig, state, batch):
     return {"params": new_params, "opt": new_opt}, metrics
 
 
-def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, _mesh,
                             state_shapes, batch_shapes):
     """jit with explicit in/out shardings for the dry-run & real launch."""
     rules = get_rules()
@@ -124,7 +124,7 @@ def _leaf_logical_axes(path: str, ndim: int, stacked: bool):
     return (("layers",) if stacked else ()) + tuple(axes)
 
 
-def param_shardings(cfg: ModelConfig, state_shapes, rules):
+def param_shardings(_cfg: ModelConfig, state_shapes, rules):
     """Map every leaf of the train state to a NamedSharding via path rules.
 
     Shardings that do not divide a dimension evenly are dropped (replicated)

@@ -1,0 +1,46 @@
+"""BENCH_*.json schema guard: benchmarks/run.py validates its --json
+collector against BENCH_SCHEMA before writing, so a renamed or dropped
+field fails the CI smoke run instead of silently breaking the perf
+trajectory artifacts."""
+import importlib.util
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def benchrun():
+    spec = importlib.util.spec_from_file_location(
+        "benchrun", ROOT / "benchmarks" / "run.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_schema_covers_every_split_section(benchrun):
+    """Each section that gets its own BENCH_<name>.json has a contract."""
+    for s in benchrun.SPLIT_SECTIONS:
+        assert s in benchrun.BENCH_SCHEMA, s
+    assert "hemm" in benchrun.BENCH_SCHEMA
+
+
+def test_complete_sections_validate(benchrun):
+    results = {s: {k: 1 for k in keys}
+               for s, keys in benchrun.BENCH_SCHEMA.items()}
+    results["fig6"] = {"fig6/hlt/mo": {"us_per_call": 1.0, "derived": "d=7"}}
+    assert benchrun.validate_results(results) == []
+
+
+def test_missing_key_is_drift(benchrun):
+    for section, keys in benchrun.BENCH_SCHEMA.items():
+        for dropped in keys:
+            partial = {k: 1 for k in keys if k != dropped}
+            problems = benchrun.validate_results({section: partial})
+            assert problems and dropped in problems[0], (section, dropped)
+
+
+def test_malformed_row_entry_is_drift(benchrun):
+    assert benchrun.validate_results({"fig6": {"fig6/x": {"us": 1}}})
+    assert benchrun.validate_results({"fig6": {"fig6/x": "not-a-dict"}})

@@ -49,10 +49,23 @@ def test_readme_links_design_doc():
 
 
 def test_design_sections_cited_by_code_exist():
-    """core/hlt.py cites §2, core/params.py + hlo_analysis §3, dryrun §4 —
-    the numbered sections must keep existing (and keep their subjects)."""
+    """core/hlt.py cites §2, core/params.py + hlo_analysis §3, dryrun §4,
+    serve §5, repro.analysis §6 — the numbered sections must keep existing
+    (and keep their subjects)."""
     design = (ROOT / "DESIGN.md").read_text()
-    for anchor in ("## §1", "## §2", "## §3", "## §4"):
+    for anchor in ("## §1", "## §2", "## §3", "## §4", "## §5", "## §6"):
         assert anchor in design, anchor
     assert "diagonal" in design.split("## §2")[1].split("## §3")[0].lower()
     assert "word-size" in design.split("## §3")[1].split("## §4")[0].lower()
+    assert "tenant" in design.split("## §5")[1].split("## §6")[0].lower()
+    # §6 is the verifier's rule catalog — every rule family must be listed
+    sec6 = design.split("## §6")[1]
+    for rule in ("LS001", "JX001", "VM001", "AR001", "VF000"):
+        assert rule in sec6, rule
+
+
+def test_readme_links_rule_catalog():
+    """README's schedule section points at the §6 diagnostic catalog."""
+    readme = (ROOT / "README.md").read_text()
+    assert "DESIGN.md §6" in readme
+    assert "repro.analysis.lint" in readme

@@ -64,7 +64,9 @@ def test_sharded_hlt_bit_exact_vs_mo(name, kw, mp):
         params = toy_params(**{kw})
         mesh = make_mesh_for(4, model_parallel={mp})
         rng = np.random.default_rng(7)
-        ctx = HEContext(CkksEngine(params), mesh=mesh)
+        # verify="error": the static verifier must admit the real-mesh
+        # sharded program (collective census, slot tables, level/scale)
+        ctx = HEContext(CkksEngine(params), mesh=mesh, verify="error")
         ref = HEContext(ctx.eng)                 # meshless oracle context
         plan = plan_hemm(ctx.eng, 4, 3, 5)
         ref.keys = ctx.keygen(rng, rot_steps=plan.rot_steps)
