@@ -57,7 +57,7 @@ SPLIT_SECTIONS = ("blockmm", "dist", "serve")
 # run loudly instead of silently breaking the comparison.
 BENCH_SCHEMA = {
     "hemm": ("shape", "logN", "hlt_us_per_schedule", "hemm_us_per_schedule",
-             "step2_operand_bytes", "step2_plan"),
+             "stage_us_per_datapath", "step2_operand_bytes", "step2_plan"),
     "blockmm": ("shape", "loop_us", "batched_us", "step1_operand_bytes",
                 "step1_slots", "schedule"),
     "dist": ("batch", "logN", "per_device_count"),
@@ -179,6 +179,25 @@ def bench_fig6_schedules(smoke: bool = False):
         row(f"fig6/hlt/{sched}", hlt_us[sched],
             f"speedup_vs_baseline={hlt_us['baseline'] / hlt_us[sched]:.2f}x")
 
+    # per-stage base-change timings, fused Pallas vs XLA lowering (§7 knob):
+    # hoist = Decomp→iNTT→BaseConv→NTT, moddown = the merged ModDown+Rescale
+    # tail.  (On CPU the fused path runs in the Pallas interpreter, so the
+    # trajectory — not the ratio — is the signal; on TPU this measures the
+    # actual datapath.)
+    from repro.core import hlt as hlt_mod
+    acc = hlt_mod.hoist(eng, ctA, datapath="xla").c0_ext
+    stage_us = {}
+    for dp in ("pallas", "xla"):
+        us_h, _ = _t(lambda dp=dp: (lambda h: (h.digits, h.c0_ext, h.c1_ext))(
+            hlt_mod.hoist(eng, ctA, datapath=dp)), reps=reps)
+        us_m, _ = _t(lambda dp=dp: eng._mod_down_eval(
+            acc, ctA.level, drop_last=True, datapath=dp), reps=reps)
+        stage_us[dp] = {"hoist": round(us_h, 1), "moddown": round(us_m, 1)}
+    for st in ("hoist", "moddown"):
+        row(f"fig6/stage/{st}", stage_us["pallas"][st],
+            f"xla_us={stage_us['xla'][st]};"
+            f"fused_vs_xla={stage_us['xla'][st] / stage_us['pallas'][st]:.2f}x")
+
     prog_mo = compile_hemm(ctx, plan, schedule="mo")
     prog_pl = compile_hemm(ctx, plan, schedule="pallas")
     us_mm, _ = _t(lambda: prog_mo(ctA, ctB), reps=1)
@@ -205,13 +224,14 @@ def bench_fig6_schedules(smoke: bool = False):
         "hlt_us_per_schedule": {k: round(v, 1) for k, v in hlt_us.items()},
         "hemm_us_per_schedule": {"mo": round(us_mm, 1),
                                  "pallas": round(us_mmp, 1)},
+        "stage_us_per_datapath": stage_us,
         "step2_operand_bytes": {
             "diag_dedup": s2.operand_bytes,
             "diag_naive": s2.operand_bytes_naive,
             "hoist_dedup": hoist_dedup, "hoist_naive": hoist_naive},
         "step2_plan": {"batch": s2.batch, "n_diag_slots": s2.n_diag_slots,
                        "chunk": s2.chunk, "d_pad": s2.d_pad,
-                       "schedule": s2.schedule},
+                       "schedule": s2.schedule, "datapath": s2.datapath},
     }
 
 

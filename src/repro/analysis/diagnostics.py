@@ -24,6 +24,7 @@ RULES = {
     "JX001": "sole-collective invariant violated in the sharded program",
     "JX002": "pallas_call missing from the fused datapath",
     "JX003": "host round-trip (callback primitive) in the hot path",
+    "JX004": "XLA-lowered NTT/iNTT in a datapath='pallas' program",
     # VMEM budget checker (analysis/vmem.py)
     "VM001": "fused-kernel working set exceeds the VMEM budget",
     # arena / aliasing auditor (analysis/arena.py)

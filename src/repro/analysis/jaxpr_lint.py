@@ -1,9 +1,9 @@
-"""Jaxpr invariant linter — the verifier's JX pass over sharded programs.
+"""Jaxpr invariant linter — the verifier's JX pass over compiled programs.
 
-Traces the compiled program's shard_map pipeline SHAPE-ONLY (ShapeDtypeStruct
+Traces the compiled program's pipeline SHAPE-ONLY (ShapeDtypeStruct
 arguments synthesized from the plan and the arena-resident operands — no
 ciphertext data exists at compile time) and walks the jaxpr recursively
-(``distributed/hlo_analysis.py``) to prove three invariants that were
+(``distributed/hlo_analysis.py``) to prove four invariants that were
 previously only asserted in tests:
 
 * JX001 — the merged ModDown+Rescale BaseConv psum is the SOLE collective:
@@ -13,6 +13,14 @@ previously only asserted in tests:
 * JX002 — ``datapath="pallas"`` really lowers through the fused kernel:
   at least one ``pallas_call`` inside the shard.
 * JX003 — no host round-trips in the hot path: no callback primitives.
+* JX004 — full stage coverage: when the plan's ``datapath`` is "pallas"
+  (the fused hoist/ModDown stages, DESIGN.md §7), NO XLA-lowered NTT/iNTT
+  remains in the traced program.  The XLA transforms are named-jit wrappers
+  (core/ntt.py ``NTT_EQN_NAMES``) so they census as pjit eqns; the Pallas
+  kernels call the unjitted ``*_raw`` recursions and contribute none.
+
+Sharded programs lint their shard_map pipeline; single-device ``pallas``
+programs lint the fused rotation+ModDown pipeline AND the hoist body.
 """
 from __future__ import annotations
 
@@ -20,12 +28,27 @@ import jax
 
 from repro.analysis.diagnostics import Diagnostic
 from repro.core import hlt_dist
+from repro.core.ntt import NTT_EQN_NAMES
 from repro.distributed import hlo_analysis
 
 
+def _named_ntt_count(jaxpr) -> int:
+    """XLA-lowered NTT/iNTT eqns (named-jit pjit markers) in a jaxpr."""
+    n = 0
+    for eqn in hlo_analysis.iter_jaxpr_eqns(jaxpr):
+        if (eqn.primitive.name == "pjit"
+                and str(eqn.params.get("name")) in NTT_EQN_NAMES):
+            n += 1
+    return n
+
+
 def lint_jaxpr(jaxpr, *, datapath: str, expected_psums: int,
-               program: str = "hlt", stage: str = "sharded") -> list:
-    """JX diagnostics for one traced program jaxpr."""
+               program: str = "hlt", stage: str = "sharded",
+               stages: str = "xla") -> list:
+    """JX diagnostics for one traced program jaxpr.  ``datapath`` is the
+    kernel lowering ("pallas" = fused rotation kernel expected, JX002);
+    ``stages`` is the hoist/ModDown stage coverage ("pallas" = no
+    XLA-lowered NTT may remain, JX004)."""
     census = hlo_analysis.jaxpr_collective_census(jaxpr)
     diags = []
     if census["other_collectives"]:
@@ -59,6 +82,16 @@ def lint_jaxpr(jaxpr, *, datapath: str, expected_psums: int,
             message=f"host callback primitive(s) in the hot path: {names}",
             hint="hot-path code must stay on-device; move host work to "
                  "compile time"))
+    if stages == "pallas":
+        n_ntt = _named_ntt_count(jaxpr)
+        if n_ntt:
+            diags.append(Diagnostic(
+                rule="JX004", severity="error", program=program, stage=stage,
+                message=f"{n_ntt} XLA-lowered NTT/iNTT op(s) in a "
+                        f"datapath='pallas' program — the hoist/ModDown "
+                        f"stages are not fully fused",
+                hint="route the base-change transforms through "
+                     "kernels/basechange.py (HEContext.datapath plumbing)"))
     return diags
 
 
@@ -112,18 +145,64 @@ def sharded_jaxpr(run):
     args, layout = synth_sharded_args(run)
     tabs, _ = run._sharded
     fn = run.ctx._sharded_pipeline(tabs, run.plan.d_pad, run.plan.nbeta,
-                                   run._datapath, run.plan.chunk, layout)
+                                   run._datapath, run.plan.chunk, layout,
+                                   run.plan.datapath)
     return jax.make_jaxpr(fn)(args)
 
 
+def pallas_jaxprs(run):
+    """Shape-only jaxprs of a single-device ``schedule="pallas"``
+    CompiledHLT: ``(pipeline_jaxpr, hoist_jaxpr)`` — the fused
+    rotation+ModDown pipeline on synthesized avals, and the hoist body the
+    execution path feeds it from (the plan's datapath decides whether both
+    lower the base-change stages through kernels/basechange.py)."""
+    import numpy as np   # dtypes only
+    from repro.core import hlt as hlt_mod
+
+    plan = run.plan
+    eng = run.ctx.eng
+    n = eng.params.N
+    level, nbeta = plan.level, plan.nbeta
+    m = len(eng.tools.digit_bases(level)[0][2])
+    u32 = np.uint32
+    shape_only = lambda a: _sds(a.shape, a.dtype)
+    operands = tuple(shape_only(a) for a in run._operands)
+    if plan.batch is None:
+        fn = run.ctx._pallas_pipeline(level, plan.chunk, "single")
+        args = (_sds((nbeta, m, n), u32), _sds((m, n), u32),
+                _sds((m, n), u32)) + operands
+    else:
+        fn = run.ctx._pallas_pipeline(level, plan.chunk, "indexed")
+        h = plan.n_ct_slots if plan.n_ct_slots is not None else plan.batch
+        args = (_sds((h, nbeta, m, n), u32), _sds((h, m, n), u32),
+                _sds((h, m, n), u32)) + operands + (
+                _sds((plan.batch,), np.int32), shape_only(run._diag_slots))
+    pipeline = jax.make_jaxpr(fn)(*args)
+    hoist_body = hlt_mod._hoist_body(eng, level, plan.datapath)
+    hoist = jax.make_jaxpr(hoist_body)(
+        _sds((level + 1, n), u32), _sds((level + 1, n), u32))
+    return pipeline, hoist
+
+
 def lint_compiled_hlt(run, *, program: str = "hlt") -> list:
-    """The full JX pass for one CompiledHLT (no-op off the sharded
-    schedules — the single-device fused pipeline calls the kernel
-    directly, there is no traced program to lint)."""
-    if not run.plan.schedule.startswith("sharded"):
+    """The full JX pass for one CompiledHLT: sharded schedules lint the
+    shard_map SPMD pipeline; the single-device fused schedule lints the
+    rotation+ModDown pipeline and the hoist body (reference schedules have
+    no compiled program to lint)."""
+    if run.plan.schedule.startswith("sharded"):
+        tabs, _ = run._sharded
+        expected = hlt_dist.expected_collectives(tabs)["psum"]
+        return lint_jaxpr(sharded_jaxpr(run), datapath=run._datapath,
+                          expected_psums=expected, program=program,
+                          stage=f"sharded[{run._datapath}]",
+                          stages=run.plan.datapath)
+    if run.plan.schedule != "pallas":
         return []
-    tabs, _ = run._sharded
-    expected = hlt_dist.expected_collectives(tabs)["psum"]
-    return lint_jaxpr(sharded_jaxpr(run), datapath=run._datapath,
-                      expected_psums=expected, program=program,
-                      stage=f"sharded[{run._datapath}]")
+    pipeline, hoist = pallas_jaxprs(run)
+    diags = lint_jaxpr(pipeline, datapath="pallas", expected_psums=0,
+                       program=program, stage="pallas[pipeline]",
+                       stages=run.plan.datapath)
+    diags += lint_jaxpr(hoist, datapath=run.plan.datapath,
+                        expected_psums=0, program=program,
+                        stage="pallas[hoist]", stages=run.plan.datapath)
+    return diags

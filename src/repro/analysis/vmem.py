@@ -1,17 +1,19 @@
-"""VMEM budget pass (VM001): the fused kernel's per-grid-step working set
-must fit ``vmem_headroom × VMEM_BYTES``.
+"""VMEM budget pass (VM001): every fused-datapath stage's per-grid-step
+working set must fit ``vmem_headroom × VMEM_BYTES``.
 
 ``pick_rotation_chunk`` chooses a fitting chunk by construction, so the
-pass only fires on an EXPLICIT ``rotation_chunk`` (or a headroom lowered
-after the fact) — exactly the case that today surfaces as a runtime OOM on
-hardware.  The footprint is evaluated forward via
-``costmodel.fused_working_set_bytes`` (the same
-``kernels/fused_hlt.working_set_rows`` formula the picker inverts).
+rotation stage only fires on an EXPLICIT ``rotation_chunk`` (or a headroom
+lowered after the fact) — exactly the case that today surfaces as a
+runtime OOM on hardware.  The hoist/ModDown base-change stages
+(``datapath="pallas"``) are chunk-independent: their footprints scale with
+the digit width α and drop-basis size instead, so the pass names the
+dominating stage per ``costmodel.fused_stage_working_sets`` (the same
+formulas the picker and the kernel footprint helpers share).
 """
 from __future__ import annotations
 
 from repro.analysis.diagnostics import Diagnostic
-from repro.core.costmodel import (VMEM_BYTES, fused_working_set_bytes,
+from repro.core.costmodel import (VMEM_BYTES, fused_stage_working_sets,
                                   pick_rotation_chunk)
 
 
@@ -19,21 +21,32 @@ def check_vmem(params, plan, *, program: str = "hlt") -> list:
     """VM001 diagnostics for one HLTPlan (empty for non-fused schedules)."""
     if plan.schedule not in ("pallas", "sharded"):
         return []
-    ws = fused_working_set_bytes(params, nbeta=plan.nbeta, chunk=plan.chunk)
+    stages = fused_stage_working_sets(params, nbeta=plan.nbeta,
+                                      chunk=plan.chunk, level=plan.level)
+    if plan.datapath != "pallas":
+        stages = {"rot": stages["rot"]}
+    worst, ws = max(stages.items(), key=lambda kv: kv[1])
     budget = plan.vmem_headroom * VMEM_BYTES
     if ws <= budget:
         return []
-    fit = pick_rotation_chunk(params, nbeta=plan.nbeta,
-                              headroom=plan.vmem_headroom)
+    if worst == "rot":
+        fit = pick_rotation_chunk(params, nbeta=plan.nbeta,
+                                  headroom=plan.vmem_headroom)
+        hint = (f"drop rotation_chunk to ≤ {max(1, fit)} (the "
+                f"pick_rotation_chunk bound) or raise "
+                f"HEContext(vmem_headroom=...)")
+    else:
+        hint = (f"the {worst} base-change stage footprint is "
+                f"chunk-independent — compile at a lower level, shrink the "
+                f"digit width (params.alpha), or raise "
+                f"HEContext(vmem_headroom=...)")
     return [Diagnostic(
         rule="VM001", severity="error", program=program,
-        stage=f"pallas_call[chunk={plan.chunk}]",
-        message=(f"fused-kernel working set {ws / 2**20:.2f} MiB per grid "
-                 f"step exceeds the VMEM budget "
+        stage=f"pallas_call[{worst},chunk={plan.chunk}]",
+        message=(f"fused {worst}-stage working set {ws / 2**20:.2f} MiB "
+                 f"per grid step exceeds the VMEM budget "
                  f"{budget / 2**20:.2f} MiB "
                  f"(headroom {plan.vmem_headroom} × 16 MiB) at "
                  f"rotation chunk {plan.chunk}, β={plan.nbeta}, "
-                 f"N={params.N}"),
-        hint=(f"drop rotation_chunk to ≤ {max(1, fit)} (the "
-              f"pick_rotation_chunk bound) or raise "
-              f"HEContext(vmem_headroom=...)"))]
+                 f"N={params.N}, level={plan.level}"),
+        hint=hint)]

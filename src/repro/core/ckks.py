@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.core import automorph, modmath as mm, ntt
 from repro.core.params import HEParams, PrimeContext, get_context
 from repro.core.rns import RnsTools
+from repro.kernels import basechange, ops
 
 
 # ---------------------------------------------------------------------------
@@ -73,10 +74,20 @@ class Keys:
 
 
 class CkksEngine:
-    def __init__(self, params: HEParams):
+    """`datapath` selects the (i)NTT lowering for every transform the engine
+    performs: "xla" is the u64 reference lowering; "pallas" routes _ntt/_intt
+    through the VMEM-resident Montgomery kernel (kernels/ntt.py) and the
+    hoist / merged ModDown+Rescale through the fused base-change kernels
+    (kernels/basechange.py). Both paths are bit-identical — the knob trades
+    lowering, not semantics (tests/test_fused_datapath.py)."""
+
+    def __init__(self, params: HEParams, datapath: str = "xla"):
+        assert datapath in ("xla", "pallas"), datapath
         self.params = params
+        self.datapath = datapath
         self.ctx: PrimeContext = get_context(params)
         self.tools = RnsTools(self.ctx)
+        self._fused_tabs: dict = {}
 
     # -- basis helpers ------------------------------------------------------
 
@@ -87,10 +98,43 @@ class CkksEngine:
         return self.basis(np.arange(ell + 1))
 
     def _ntt(self, x, view):
+        if self.datapath == "pallas":
+            return ops.ntt(x[None], view.psi_brv_mont, view.moduli_u32,
+                           view.qneg_inv)[0]
         return ntt.ntt(x, view.psi_brv, view.moduli)
 
     def _intt(self, x, view):
+        if self.datapath == "pallas":
+            return ops.intt(x[None], view.psi_inv_brv_mont, view.n_inv_mont,
+                            view.moduli_u32, view.qneg_inv)[0]
         return ntt.intt(x, view.psi_inv_brv, view.n_inv, view.moduli)
+
+    # -- fused base-change tables (cached per level) -------------------------
+
+    def _fp_dtype(self):
+        """Float dtype of the fused BaseConv correction: f64 keeps CPU runs
+        bit-exact vs the u64 oracle; TPU uses the native f32 path (same
+        convention as the sharded datapath)."""
+        return np.float64 if jax.default_backend() == "cpu" else np.float32
+
+    def fused_hoist_tables(self, level: int) -> dict:
+        key = ("hoist", level)
+        if key not in self._fused_tabs:
+            # ensure_compile_time_eval: the first call may happen inside a
+            # jit/make_jaxpr trace (the verifier's shape-only lint) — the
+            # cached tables must be CONCRETE arrays, never leaked tracers.
+            with jax.ensure_compile_time_eval():
+                self._fused_tabs[key] = basechange.build_hoist_tables(
+                    self.ctx, self.tools, level, fp_dtype=self._fp_dtype())
+        return self._fused_tabs[key]
+
+    def fused_moddown_tables(self, level: int) -> dict:
+        key = ("moddown", level)
+        if key not in self._fused_tabs:
+            with jax.ensure_compile_time_eval():
+                self._fused_tabs[key] = basechange.build_moddown_tables(
+                    self.ctx, self.tools, level, fp_dtype=self._fp_dtype())
+        return self._fused_tabs[key]
 
     # -- encode / decode (host, FFT-based canonical embedding) --------------
 
@@ -338,9 +382,19 @@ class CkksEngine:
                              fview.moduli)
         return self._mod_down_eval(acc0, ell), self._mod_down_eval(acc1, ell)
 
-    def _mod_down_eval(self, x_full, ell: int, drop_last: bool = False):
+    def _mod_down_eval(self, x_full, ell: int, drop_last: bool = False,
+                       datapath: Optional[str] = None):
         """ModDown from Q_ℓ ∪ P back to Q_ℓ (or Q_{ℓ-1} when drop_last — the
-        paper's merged ModDown+Rescale), eval domain in/out."""
+        paper's merged ModDown+Rescale), eval domain in/out.
+
+        datapath overrides the engine knob per call; "pallas" + drop_last
+        runs the whole iNTT→BaseConv→NTT→sub→·P⁻¹ tail as two fused
+        pallas_calls (kernels/basechange.py), bit-exact vs the XLA chain."""
+        dp = self.datapath if datapath is None else datapath
+        if dp == "pallas" and drop_last:
+            tabs = self.fused_moddown_tables(ell)
+            return basechange.moddown_fused(x_full, tabs,
+                                            interpret=ops._interp())
         p = self.params
         spec = tuple(range(p.num_main, p.num_total))
         P = spec + ((ell,) if drop_last else ())

@@ -131,16 +131,28 @@ class HEContext:
     §6) every compile runs through: ``"warn"`` (default) emits
     VerificationWarning findings, ``"error"`` raises VerificationError on
     error-severity findings, ``"off"`` skips verification entirely.
+
+    ``datapath`` selects the stage coverage of compiled fused-schedule
+    programs (DESIGN.md §7): ``"pallas"`` (default) runs the hoist and the
+    merged ModDown+Rescale through the fused Pallas base-change kernels
+    (kernels/basechange.py), so the whole HLT pipeline is Pallas;
+    ``"xla"`` keeps those two stages on the pre-fusion XLA lowering (the
+    comparison baseline benchmarks report against).  Reference schedules
+    (baseline/hoisted/mo) always stay on the XLA oracle path.
     """
 
     VERIFY_MODES = ("error", "warn", "off")
+    DATAPATHS = ("pallas", "xla")
 
     def __init__(self, eng: CkksEngine, keys: Optional[Keys] = None,
                  mesh=None, vmem_headroom: Optional[float] = None,
-                 verify: str = "warn"):
+                 verify: str = "warn", datapath: str = "pallas"):
         assert verify in self.VERIFY_MODES, \
             f"verify={verify!r} not in {self.VERIFY_MODES}"
+        assert datapath in self.DATAPATHS, \
+            f"datapath={datapath!r} not in {self.DATAPATHS}"
         self.verify = verify
+        self.datapath = datapath
         self.eng = eng
         self.keys = keys
         self.arena = OperandArena()
@@ -173,10 +185,10 @@ class HEContext:
     def create(cls, params, rng: np.random.Generator,
                rot_steps: Sequence[int] = (), mesh=None,
                vmem_headroom: Optional[float] = None,
-               verify: str = "warn") -> "HEContext":
+               verify: str = "warn", datapath: str = "pallas") -> "HEContext":
         """Build an engine from ``params`` and keygen in one call."""
         ctx = cls(CkksEngine(params), mesh=mesh, vmem_headroom=vmem_headroom,
-                  verify=verify)
+                  verify=verify, datapath=datapath)
         ctx.keygen(rng, rot_steps=rot_steps)
         return ctx
 
@@ -207,13 +219,19 @@ class HEContext:
     # -- jitted pipelines (merged ModDown+Rescale included) ------------------
 
     def _pallas_pipeline(self, level: int, chunk: int, kind: str):
-        """Jitted fused-kernel pipeline; kind = "single" | "indexed"."""
-        key = ("pallas", kind, level, chunk)
+        """Jitted fused-kernel pipeline; kind = "single" | "indexed".
+
+        ``ctx.datapath`` picks the merged-ModDown lowering: "pallas" routes
+        it through the fused base-change kernel, "xla" keeps the scan
+        baseline (the hoist side of the knob lives at the hoist call
+        sites)."""
+        key = ("pallas", kind, level, chunk, self.datapath)
         fn = self._jit.get(key)
         if fn is not None:
             return fn
         from repro.kernels import ops
         eng = self.eng
+        dp = self.datapath
         full = eng.tools.digit_bases(level)[0][2]
         view = eng.basis(full)
         q32, qneg = view.moduli_u32, view.qneg_inv
@@ -221,8 +239,10 @@ class HEContext:
         def single(digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id):
             a0, a1 = ops.fused_hlt(digits, c0e, c1e, u_m, rk0_m, rk1_m,
                                    perms, is_id, q32, qneg, chunk=chunk)
-            return (eng._mod_down_eval(a0, level, drop_last=True),
-                    eng._mod_down_eval(a1, level, drop_last=True))
+            return (eng._mod_down_eval(a0, level, drop_last=True,
+                                       datapath=dp),
+                    eng._mod_down_eval(a1, level, drop_last=True,
+                                       datapath=dp))
 
         def indexed(digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id,
                     ct_slots, diag_slots):
@@ -230,7 +250,8 @@ class HEContext:
                 digits, c0e, c1e, u_m, rk0_m, rk1_m, perms, is_id,
                 ct_slots, diag_slots, q32, qneg, chunk=chunk)
             down = jax.vmap(
-                lambda a: eng._mod_down_eval(a, level, drop_last=True))
+                lambda a: eng._mod_down_eval(a, level, drop_last=True,
+                                             datapath=dp))
             return down(a0), down(a1)
 
         fn = jax.jit(single if kind == "single" else indexed)
@@ -240,7 +261,8 @@ class HEContext:
     def _sharded_pipeline(self, tabs, d_pad: int, nbeta: int,
                           datapath: str = "pallas",
                           chunk: Optional[int] = None,
-                          hoist_layout: str = "dedup"):
+                          hoist_layout: str = "dedup",
+                          stages: str = "pallas"):
         """Jitted shard_map SPMD MO-HLT (core/hlt_dist.py) for one compile
         point; batch/slot-count changes retrace automatically (arg shapes).
 
@@ -252,15 +274,16 @@ class HEContext:
         (``schedule="sharded_xla"``).  The f64 BaseConv correction keeps CPU
         runs bit-exact vs the MO oracle; TPU runs use the native f32 path.
         """
-        key = ("sharded", datapath, hoist_layout, tabs.level, tabs.n_model,
-               d_pad, nbeta, chunk)
+        key = ("sharded", datapath, stages, hoist_layout, tabs.level,
+               tabs.n_model, d_pad, nbeta, chunk)
         fn = self._jit.get(key)
         if fn is not None:
             return fn
         fp = jnp.float64 if jax.default_backend() == "cpu" else jnp.float32
         fn = jax.jit(hlt_dist.make_sharded_hlt_fn(
             tabs, self.rules, d_pad=d_pad, nbeta=nbeta, fp_dtype=fp,
-            datapath=datapath, chunk=chunk, hoist_layout=hoist_layout))
+            datapath=datapath, chunk=chunk, hoist_layout=hoist_layout,
+            stages=stages))
         self._jit[key] = fn
         return fn
 
@@ -296,6 +319,11 @@ def legacy_context(eng: CkksEngine, keys: Keys) -> HEContext:
 class HLTPlan:
     """The cost model's output for one compiled HLT — fully inspectable.
 
+    ``datapath`` records the hoist/ModDown stage coverage the program
+    compiled with: ``"pallas"`` = the fused base-change kernels
+    (kernels/basechange.py), ``"xla"`` = the pre-fusion lowering (always
+    the case for the reference schedules and ``sharded_xla``).
+
     Sizing fields: ``level`` is the input ciphertext level (output is one
     lower); ``batch`` is the compile-time batch width (``None`` = a
     single-ciphertext compile); ``nbeta`` is the digit count β' at this
@@ -324,6 +352,7 @@ class HLTPlan:
     """
 
     schedule: str                       # chosen schedule
+    datapath: str                       # hoist/ModDown coverage: pallas | xla
     level: int                          # input ciphertext level
     batch: Optional[int]                # None = single-ciphertext compile
     nbeta: int                          # digit count β' at this level
@@ -437,8 +466,14 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
     assert schedule in hlt_mod.SCHEDULES, schedule
     sharded = schedule.startswith("sharded")
 
+    # stage coverage: the ctx knob only applies to the fused schedules —
+    # reference schedules and the pre-fusion sharded_xla baseline always
+    # run the hoist/ModDown stages on the XLA oracle lowering
+    datapath = ctx.datapath if schedule in ("pallas", "sharded") else "xla"
+
     memo_key = ("hlt", schedule, level, batch, rotation_chunk, ct_slots,
-                ctx.verify, tuple(_StrongKey(ds) for ds in diag_list))
+                ctx.verify, datapath,
+                tuple(_StrongKey(ds) for ds in diag_list))
     hit = ctx._compiled.get(memo_key)
     if hit is not None:
         return hit
@@ -514,7 +549,8 @@ def compile_hlt(ctx: HEContext, diags: Union[DiagSet, Sequence[DiagSet]], *,
     n_hoist = ctb if (n_ct_slots is None or schedule == "sharded_xla") \
         else n_ct_slots
     plan = HLTPlan(
-        schedule=schedule, level=level, batch=batch, nbeta=nbeta, chunk=chunk,
+        schedule=schedule, datapath=datapath,
+        level=level, batch=batch, nbeta=nbeta, chunk=chunk,
         d=d_list, d_pad=d_pad, diag_slots=tuple(slots),
         n_diag_slots=len(uniq), rotations=sum(d_list),
         operand_bytes=op_bytes, operand_bytes_naive=naive,
@@ -565,13 +601,15 @@ class CompiledHLT:
 
     def _hoist_items(self, items):
         """Dedupe by object identity, hoist unique ciphertexts in ONE batched
-        pipeline, return (unique_hoisted, ct_slots)."""
+        pipeline (the plan's datapath picks fused-Pallas vs XLA), return
+        (unique_hoisted, ct_slots)."""
         eng = self.ctx.eng
         uniq, slots = _dedup_by_identity(items)
         cts = [(i, it) for i, it in enumerate(uniq)
                if not isinstance(it, Hoisted)]
         hoisted = list(uniq)
-        for (i, _), h in zip(cts, hoist_batched(eng, [it for _, it in cts]),
+        for (i, _), h in zip(cts, hoist_batched(eng, [it for _, it in cts],
+                                                datapath=self.plan.datapath),
                              strict=True):
             hoisted[i] = h
         for h in hoisted:
@@ -611,7 +649,8 @@ class CompiledHLT:
                 "schedule='baseline' has no hoisting product; pass Ciphertexts"
             assert item.level == plan.level
             return hlt_mod._hlt_baseline(eng, item, ds, ctx.keys)
-        hst = item if isinstance(item, Hoisted) else hoist(eng, item)
+        hst = item if isinstance(item, Hoisted) else \
+            hoist(eng, item, datapath=plan.datapath)
         assert hst.level == plan.level, (hst.level, plan.level)
         if plan.schedule == "hoisted":
             return hlt_mod._hlt_hoisted(eng, hst, ds, ctx.keys)
@@ -704,7 +743,8 @@ class CompiledHLT:
         tabs, _ = self._sharded
         args, layout = self._sharded_args(items)
         fn = ctx._sharded_pipeline(tabs, plan.d_pad, plan.nbeta,
-                                   self._datapath, plan.chunk, layout)
+                                   self._datapath, plan.chunk, layout,
+                                   plan.datapath)
         out0, out1 = fn(args)
         lvl = plan.level
         return [self._finish(out0[b, :lvl], out1[b, :lvl], it.scale, ds)
@@ -720,7 +760,8 @@ class CompiledHLT:
         args, layout = self._sharded_args(items)
         fn = self.ctx._sharded_pipeline(tabs, self.plan.d_pad,
                                         self.plan.nbeta, self._datapath,
-                                        self.plan.chunk, layout)
+                                        self.plan.chunk, layout,
+                                        self.plan.datapath)
         return fn.lower(args).compile().as_text()
 
     def _run_batched_pallas(self, items) -> list:
@@ -830,7 +871,8 @@ class HEMMProgram:
                 # ciphertext ONCE per rank) — feed the Step-1 cts directly
                 outs = self._step2([ctA0] * p.l + [ctB0] * p.l)
             else:
-                hstA, hstB = hoist_batched(eng, [ctA0, ctB0])
+                hstA, hstB = hoist_batched(
+                    eng, [ctA0, ctB0], datapath=self.plan.step2.datapath)
                 outs = self._step2([hstA] * p.l + [hstB] * p.l)
         else:
             s1a, s1b = self._step1
@@ -839,7 +881,9 @@ class HEMMProgram:
                     self.plan.schedule.startswith("sharded"):
                 inA, inB = ctA0, ctB0
             else:   # hoist once, reuse across all l Step-2 HLTs per input
-                inA, inB = hoist(eng, ctA0), hoist(eng, ctB0)
+                dp = self.plan.step2.datapath
+                inA = hoist(eng, ctA0, datapath=dp)
+                inB = hoist(eng, ctB0, datapath=dp)
             outs = ([run(inA) for run in self._step2[:p.l]]
                     + [run(inB) for run in self._step2[p.l:]])
         acc: Optional[Ciphertext] = None
@@ -1031,7 +1075,8 @@ class BlockMMProgram:
             hst = outs
         else:
             uniq, uslots = _dedup_by_identity(outs)
-            hu = hoist_batched(eng, uniq)
+            hu = hoist_batched(eng, uniq,
+                               datapath=self.plan.step2.datapath)
             hst = [hu[s] for s in uslots]
         # Step 2 — ALL l·(nA + nB) ε/ω HLTs as ONE slot-indexed launch
         items2 = ([hst[t] for _ in range(p.l) for t in range(nA)]

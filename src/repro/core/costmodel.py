@@ -73,18 +73,43 @@ def pick_rotation_chunk(params: "HEParams", nbeta: int | None = None,
     return max(1, int((budget_rows - resident) // per_rotation))
 
 
+def fused_stage_working_sets(params: "HEParams", *, nbeta: int, chunk: int,
+                             level: int | None = None) -> dict:
+    """Per-grid-step working-set bytes of EACH fused pipeline stage.
+
+    ``rot`` is the rotation-loop kernel (``kernels/fused_hlt.
+    working_set_rows``, the chunk-dependent term ``pick_rotation_chunk``
+    inverts); ``hoist`` / ``moddown`` are the fused base-change stages
+    (``kernels/basechange.py`` footprint helpers) — chunk-independent, so
+    they bound the budget but never the chunk pick.  ``level`` sizes the
+    hoist's digit width α and the ModDown drop-basis |P∪{q_ℓ}| (defaults
+    to the top level).
+    """
+    from repro.kernels.basechange import (hoist_working_set_rows,
+                                          moddown_working_set_rows)
+    from repro.kernels.fused_hlt import working_set_rows
+    level = params.L if level is None else level
+    alpha = min(params.alpha, level + 1)
+    row = 4 * params.N
+    return {
+        "rot": int(working_set_rows(nbeta, chunk) * row),
+        "hoist": int(hoist_working_set_rows(nbeta, alpha) * row),
+        "moddown": int(moddown_working_set_rows(params.k + 1) * row),
+    }
+
+
 def fused_working_set_bytes(params: "HEParams", *, nbeta: int,
-                            chunk: int) -> int:
-    """Forward evaluation of the fused kernel's per-grid-step working set
-    (``kernels/fused_hlt.working_set_rows`` × one N-coefficient u32 row) —
-    what ``pick_rotation_chunk`` inverts.  The verifier's VMEM pass
+                            chunk: int, level: int | None = None) -> int:
+    """Peak per-grid-step working set of the fused datapath: the MAX over
+    the rotation-loop / hoist / ModDown stage footprints
+    (``fused_stage_working_sets``).  The verifier's VMEM pass
     (``repro.analysis.vmem``, VM001) fails a compile whose explicit
     ``rotation_chunk`` pushes this past ``vmem_headroom × VMEM_BYTES``;
     under ``schedule="sharded"`` the same bound applies per model rank
     (the kernel sees the limb-row shard, so the per-row set is unchanged).
     """
-    from repro.kernels.fused_hlt import working_set_rows
-    return int(working_set_rows(nbeta, chunk) * 4 * params.N)
+    return max(fused_stage_working_sets(
+        params, nbeta=nbeta, chunk=chunk, level=level).values())
 
 
 def sharded_collective_bytes(params: "HEParams", *, n_model: int = 1,

@@ -67,6 +67,7 @@ import jax.numpy as jnp
 
 from repro.core import automorph, modmath as mm
 from repro.core.ckks import Ciphertext, CkksEngine, Keys, Plaintext
+from repro.kernels import basechange, ops
 
 
 @dataclasses.dataclass
@@ -132,10 +133,25 @@ def encode_diagonals(eng: CkksEngine, U: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def _hoist_body(eng: CkksEngine, level: int):
+def _hoist_body(eng: CkksEngine, level: int, datapath: Optional[str] = None):
     """Traceable (c0, c1) -> (digits, c0_ext, c1_ext) hoisting body at a fixed
-    level — shared verbatim by hoist() and (under vmap) hoist_batched()."""
+    level — shared verbatim by hoist() and (under vmap) hoist_batched().
+
+    datapath "pallas" runs Decomp→iNTT→ModUp-BaseConv→NTT as two fused
+    pallas_calls (kernels/basechange.py) instead of the per-digit XLA chain;
+    bit-exact vs it (tests/test_fused_datapath.py)."""
     p = eng.params
+    dp = eng.datapath if datapath is None else datapath
+    if dp == "pallas":
+        tabs = eng.fused_hoist_tables(level)
+
+        def body_fused(c0, c1):
+            digs = basechange.hoist_fused(c1, tabs, interpret=ops._interp())
+            return (digs, _scale_raise(eng, c0, level),
+                    _scale_raise(eng, c1, level))
+
+        return body_fused
+
     bases = eng.tools.digit_bases(level)
     full = bases[0][2]
     pos = {g: i for i, g in enumerate(full)}
@@ -157,29 +173,44 @@ def _hoist_body(eng: CkksEngine, level: int):
     return body
 
 
-def hoist(eng: CkksEngine, ct: Ciphertext) -> Hoisted:
+def hoist(eng: CkksEngine, ct: Ciphertext,
+          datapath: Optional[str] = None) -> Hoisted:
     """Decomp + ModUp once (Algorithm 3 lines 1–2)."""
-    digits, c0e, c1e = _hoist_body(eng, ct.level)(ct.c0, ct.c1)
+    digits, c0e, c1e = _hoist_body(eng, ct.level, datapath)(ct.c0, ct.c1)
     return Hoisted(digits=digits, c0_ext=c0e, c1_ext=c1e,
                    level=ct.level, scale=ct.scale)
 
 
-def hoist_batched(eng: CkksEngine, cts: Sequence[Ciphertext]) -> list:
+def hoist_batched(eng: CkksEngine, cts: Sequence[Ciphertext], *,
+                  datapath: Optional[str] = None,
+                  double_buffer: bool = True) -> list:
     """Decomp + ModUp across the ciphertext axis: N hoisting products as ONE
     vmapped pipeline instead of a per-ciphertext Python loop (the last such
     loop in the batched block-MM path).  All cts must share one level.
-    Bit-exact vs a loop of hoist() calls (same traced body, vmapped)."""
+    Bit-exact vs a loop of hoist() calls (same traced body, vmapped).
+
+    On the "pallas" datapath with >1 ct the digits run through the
+    double-buffered hoist kernel (kernels/basechange.py hoist_db): one grid
+    step per ciphertext, ct i+1's DMA overlapping ct i's transform."""
     cts = list(cts)
     if not cts:
         return []
     levels = {ct.level for ct in cts}
     assert len(levels) == 1, f"hoist_batched needs one common level: {levels}"
     level = cts[0].level
+    dp = eng.datapath if datapath is None else datapath
     if len(cts) == 1:
-        return [hoist(eng, cts[0])]
+        return [hoist(eng, cts[0], dp)]
     c0s = jnp.stack([ct.c0 for ct in cts])
     c1s = jnp.stack([ct.c1 for ct in cts])
-    digits, c0e, c1e = jax.vmap(_hoist_body(eng, level))(c0s, c1s)
+    if dp == "pallas" and double_buffer:
+        tabs = eng.fused_hoist_tables(level)
+        digits = basechange.hoist_fused_db(c1s, tabs,
+                                           interpret=ops._interp())
+        raise_b = jax.vmap(lambda x: _scale_raise(eng, x, level))
+        c0e, c1e = raise_b(c0s), raise_b(c1s)
+    else:
+        digits, c0e, c1e = jax.vmap(_hoist_body(eng, level, dp))(c0s, c1s)
     return [Hoisted(digits=digits[b], c0_ext=c0e[b], c1_ext=c1e[b],
                     level=level, scale=ct.scale)
             for b, ct in enumerate(cts)]

@@ -170,16 +170,8 @@ def build_tables(params: HEParams, d: int, ctb: int) -> DistTables:
 
 
 def _mod_reduce(x, q32, axis: int):
-    """Tree-reduce modular sum along `axis` with montadd (u32-safe)."""
-    n = x.shape[axis]
-    while n > 1:
-        h = n // 2
-        a = jax.lax.slice_in_dim(x, 0, h, axis=axis)
-        b = jax.lax.slice_in_dim(x, h, 2 * h, axis=axis)
-        rest = jax.lax.slice_in_dim(x, 2 * h, n, axis=axis)
-        x = jnp.concatenate([mm.montadd(a, b, q32), rest], axis=axis)
-        n = n - h
-    return jnp.squeeze(x, axis=axis)
+    """Tree-reduce modular sum along `axis` (shared impl: mm.montsum)."""
+    return mm.montsum(x, q32, axis=axis)
 
 
 def _base_conv_mont(x, t, fp_dtype):
@@ -456,9 +448,14 @@ def build_shard_tables(params: HEParams, level: int,
         digits=digits, md=md)
 
 
+#: tab-dict keys whose LEADING axis is the digit index (limb rows on axis 1)
+_STACKED_TAB_KEYS = ("w_stack", "d_stack", "mask_stack")
+
+
 def _tab_keys(tabs: ShardTables) -> list:
     return (["q32", "qneg", "psi_m", "psii_m", "ninv_m", "p_raise_m",
              "md_hat_inv", "md_W", "md_D", "md_p_inv", "sel_drop"]
+            + list(_STACKED_TAB_KEYS)
             + [f"{pre}{j}" for j in range(len(tabs.digits))
                for pre in ("W", "D", "mask")])
 
@@ -466,13 +463,26 @@ def _tab_keys(tabs: ShardTables) -> list:
 def shard_operand_arrays(tabs: ShardTables) -> dict:
     """The limb-sharded table operands passed INTO the shard_map program
     (each model rank receives its row block via the in_specs — nothing is
-    dynamically indexed by device id inside the program)."""
+    dynamically indexed by device id inside the program).
+
+    ``w_stack``/``d_stack``/``mask_stack`` are the per-digit BaseConv tables
+    restacked to a leading digit axis (columns zero-padded to the common
+    ``alpha``), the layout the fused base-change kernel
+    (kernels/basechange.py ``baseconv_ntt``) grids over — the per-digit
+    ``W{j}``/``D{j}``/``mask{j}`` keys stay for the XLA stage baseline."""
+    alpha = max(dg["W_full"].shape[1] for dg in tabs.digits)
     out = dict(
         q32=tabs.q32, qneg=tabs.qneg, psi_m=tabs.psi_m, psii_m=tabs.psii_m,
         ninv_m=tabs.ninv_m, p_raise_m=tabs.p_raise_m,
         md_hat_inv=tabs.md["hat_inv_full"], md_W=tabs.md["W_full"],
         md_D=tabs.md["D_full"], md_p_inv=tabs.md["p_inv_full"],
         sel_drop=tabs.md["sel_drop"],
+        w_stack=np.stack([
+            np.pad(dg["W_full"], ((0, 0), (0, alpha - dg["W_full"].shape[1])))
+            for dg in tabs.digits]),
+        d_stack=np.stack([dg["D_full"] for dg in tabs.digits]),
+        mask_stack=np.stack([dg["own_mask"].astype(np.uint32)
+                             for dg in tabs.digits]),
     )
     for j, dg in enumerate(tabs.digits):
         out[f"W{j}"] = dg["W_full"]
@@ -530,8 +540,19 @@ def expected_collectives(tabs: ShardTables) -> dict:
 def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
                         fp_dtype=jnp.float64, unroll: int = 1,
                         datapath: str = "pallas", chunk: Optional[int] = None,
-                        hoist_layout: str = "dedup"):
+                        hoist_layout: str = "dedup", stages: str = "pallas"):
     """Build the ``schedule="sharded"`` SPMD program for one compile point.
+
+    ``stages`` picks the hoist / merged-ModDown STAGE coverage of the
+    ``datapath="pallas"`` body (HEContext.datapath threads it through):
+    ``"pallas"`` (default) runs the per-rank hoist through the fused
+    base-change kernels (kernels/basechange.py — replicated main-basis
+    iNTT·q̂⁻¹, then rank-local BaseConv+NTT off the stacked digit tables)
+    and splits the merged ModDown into Pallas pre-psum (iNTT·q̂⁻¹ on the
+    rank rows) → the sel_drop scatter + psum (STILL the only collective,
+    byte-identical traffic) → Pallas post-psum (BaseConv+NTT+sub+·P⁻¹);
+    ``"xla"`` keeps both stages on the pre-fusion XLA lowering.  The
+    ``datapath="xla"`` baseline body ignores ``stages``.
 
     Returns ``fn(args) -> (acc0, acc1)``.  With ``datapath="pallas"`` (the
     production default) ``args`` is a dict over H hoist inputs:
@@ -592,6 +613,7 @@ def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
     from jax.sharding import PartitionSpec as P
 
     assert datapath in ("pallas", "xla"), datapath
+    assert stages in ("pallas", "xla"), stages
     mesh = rules.mesh
     limb_axes = _physical_axes(rules, "limbs") if tabs.n_model > 1 else ()
     ct_axes = _physical_axes(rules, "ct_batch")
@@ -654,20 +676,82 @@ def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
             return mm.montmul(diff, t["md_p_inv"], q, qn)
         return mod_down
 
+    # ---- fused stage coverage (stages="pallas"): per-rank base-change
+    # kernels; same math row-for-row as hoist_local/make_mod_down above ----
+    fused_stages = datapath == "pallas" and stages == "pallas"
+    if fused_stages:
+        from repro.kernels import basechange, ops as _ops
+        interp = _ops._interp()
+        p = tabs.params
+        N = p.N
+        nq = tabs.level + 1
+        nbeta_t = len(tabs.digits)
+        alpha = max(e_ - s_ for s_, e_ in dig_sl)
+        R = nbeta_t * alpha
+        # replicated digit-padded stage-1 tables (main basis; padded rows
+        # carry zero twiddles/scales and map zero -> zero)
+        h_psii = np.zeros((R, N), np.uint32)
+        h_ninv = np.zeros((R, 1), np.uint32)
+        h_hat = np.zeros((R, 1), np.uint32)
+        h_q = np.full((R, 1), np.asarray(tabs.q_main)[0, 0], np.uint32)
+        h_qneg = np.full((R, 1), np.asarray(tabs.qneg_main)[0, 0], np.uint32)
+        h_invd = np.zeros((nbeta_t, alpha, 1), np.float64)
+        for j, (s_, e_) in enumerate(dig_sl):
+            na = e_ - s_
+            rows = slice(j * alpha, j * alpha + na)
+            h_psii[rows] = np.asarray(tabs.psii_main)[s_:e_]
+            h_ninv[rows] = np.asarray(tabs.ninv_main)[s_:e_]
+            h_q[rows] = np.asarray(tabs.q_main)[s_:e_]
+            h_qneg[rows] = np.asarray(tabs.qneg_main)[s_:e_]
+            h_hat[rows] = np.asarray(tabs.digits[j]["hat_inv_m"])
+            h_invd[j, :na] = tabs.digits[j]["inv_d"]
+        h_psii, h_ninv, h_hat = map(jnp.asarray, (h_psii, h_ninv, h_hat))
+        h_q, h_qneg = jnp.asarray(h_q), jnp.asarray(h_qneg)
+        h_invd = jnp.asarray(h_invd.astype(fp_dtype))
+
+    def hoist_local_fused(t, c1rep, c1f, q, qn):
+        """Fused hoist_local: stage 1 on the replicated main rows, stage 2
+        (BaseConv + NTT + own-row passthrough) on this rank's row block."""
+        def one(c1r_i, c1f_i):
+            x_dig = jnp.pad(c1r_i, ((0, R - nq), (0, 0)))
+            y = basechange.intt_scale(x_dig, h_psii, h_ninv, h_hat, h_q,
+                                      h_qneg, interpret=interp)
+            return basechange.baseconv_ntt(
+                y, t["w_stack"], t["d_stack"], h_invd, t["psi_m"], q, qn,
+                c1f_i, t["mask_stack"], interpret=interp)
+        return jax.vmap(one)(c1rep, c1f)
+
+    def make_mod_down_fused(t, q, qn):
+        """Fused merged ModDown+Rescale — the sel_drop scatter and the psum
+        (STILL the only collective) stay on XLA between the two kernels."""
+        def mod_down(acc):
+            y = jax.vmap(lambda x: basechange.intt_scale(
+                x, t["psii_m"], t["ninv_m"], t["md_hat_inv"], q, qn,
+                interpret=interp))(acc)
+            part = jnp.sum(t["sel_drop"][None, :, :, None] * y[:, None],
+                           axis=2)                       # (B, |drop|, N)
+            y_drop = (jax.lax.psum(part, limb_axes) if limb_axes else part)
+            return jax.vmap(lambda x, yd: basechange.moddown_finish(
+                x, yd, t["md_W"], t["md_D"], md_invd, t["psi_m"],
+                t["md_p_inv"], q, qn, interpret=interp))(acc, y_drop)
+        return mod_down
+
     def body_pallas(a):
         """Fused datapath: deduped hoist + per-rank fused_hlt_indexed."""
         from repro.kernels import ops
         t = a["tab"]
         q, qn = t["q32"], t["qneg"]
         # ---- hoist H UNIQUE cts (ct-slot dedup), limb-local rows ----
-        digits = hoist_local(t, a["c1rep"], a["c1u"], q, qn)
+        digits = (hoist_local_fused if fused_stages else hoist_local)(
+            t, a["c1rep"], a["c1u"], q, qn)
         c0e = mm.montmul(a["c0u"], t["p_raise_m"], q, qn)
         c1e = mm.montmul(a["c1u"], t["p_raise_m"], q, qn)
         # ---- fused rotation loop on this rank's limb-row shard ----
         acc0, acc1 = ops.fused_hlt_indexed(
             digits, c0e, c1e, a["u"], a["rk0"], a["rk1"], a["perms"],
             a["is_id"], a["ct_slots"], a["slots"], q, qn, chunk=kchunk)
-        mod_down = make_mod_down(t, q, qn)
+        mod_down = (make_mod_down_fused if fused_stages
+                    else make_mod_down)(t, q, qn)
         return mod_down(acc0), mod_down(acc1)
 
     def body_xla(a):
@@ -713,7 +797,9 @@ def make_sharded_hlt_fn(tabs: ShardTables, rules, *, d_pad: int, nbeta: int,
         mod_down = make_mod_down(t, q, qn)
         return mod_down(acc0), mod_down(acc1)
 
-    tab_specs = {k: (P(None, limb) if k == "sel_drop" else P(limb, None))
+    tab_specs = {k: (P(None, limb)
+                     if k == "sel_drop" or k in _STACKED_TAB_KEYS
+                     else P(limb, None))
                  for k in _tab_keys(tabs)}
     op_specs = dict(
         u=P(None, None, limb, None),

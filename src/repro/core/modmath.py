@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
+from jax import lax
 
 U32 = jnp.uint32
 U64 = jnp.uint64
@@ -99,6 +100,25 @@ def montadd(a, b, q32):
 def montsub(a, b, q32):
     d = a + q32 - b
     return jnp.where(d >= q32, d - q32, d)
+
+
+def montsum(x, q32, axis: int = 0):
+    """Tree-reduce modular sum along `axis` with montadd (u32-safe).
+
+    log2(n) vectorized halving steps instead of an n-term sequential MAC
+    chain — the one reduction shared by the BaseConv kernels and the sharded
+    datapath (a 44-limb basis traces as 6 adds, not 44). Returns x with
+    `axis` squeezed out.
+    """
+    n = x.shape[axis]
+    while n > 1:
+        h = n // 2
+        a = lax.slice_in_dim(x, 0, h, axis=axis)
+        b = lax.slice_in_dim(x, h, 2 * h, axis=axis)
+        rest = lax.slice_in_dim(x, 2 * h, n, axis=axis)
+        x = jnp.concatenate([montadd(a, b, q32), rest], axis=axis)
+        n = n - h
+    return jnp.squeeze(x, axis=axis)
 
 
 def to_mont(x, q32, qneg_inv, r2):

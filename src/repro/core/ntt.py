@@ -8,23 +8,38 @@ products and automorphism tables are consistent with that convention
 (verified numerically in tests/test_ntt.py).
 
 The stage loop is a Python loop over log2(N) reshape/butterfly steps — under
-jit this unrolls into a fixed dataflow graph, which is exactly what the Pallas
-kernel mirrors with VMEM-resident stages (kernels/ntt.py).
+jit this unrolls into a fixed dataflow graph. The `*_raw` impls below are the
+single source of truth for that recursion: they are shape-polymorphic (any
+leading dims, scalar or (M, 1) moduli), so the Pallas kernels in
+kernels/ntt.py and kernels/basechange.py call them directly on flat (N,)
+rows with scalar q, while XLA call sites go through the public `jax.jit`
+wrappers. The wrappers are deliberately *named* jits: every XLA lowering of
+an NTT shows up in a traced jaxpr as a `pjit` eqn whose name is one of
+`NTT_EQN_NAMES`, which is how the JX004 linter rule (analysis/jaxpr_lint.py)
+proves a fused datapath contains no XLA-lowered NTT.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import modmath as mm
 
+#: pjit eqn names produced by the public wrappers — the JX004 census keys.
+NTT_EQN_NAMES = frozenset({"ntt", "intt", "ntt_mont", "intt_mont"})
+
 
 def _as3(q):
-    """(M,1) modulus column -> (M,1,1) for (…,M,m,t)-shaped butterfly views."""
+    """(M,1) modulus column -> (M,1,1) for (…,M,m,t)-shaped butterfly views.
+
+    A scalar () modulus becomes (1,), broadcasting against the flat-(N,) row
+    views used inside Pallas kernel bodies.
+    """
     return q[..., None]
 
 
-def ntt(x, psi_brv, q):
-    """Forward negacyclic NTT.
+def ntt_raw(x, psi_brv, q):
+    """Forward negacyclic NTT (unjitted stage recursion).
 
     x: (..., M, N) uint32, natural order coefficients.
     psi_brv: (M, N) uint32 table ψ^br(i).
@@ -46,7 +61,7 @@ def ntt(x, psi_brv, q):
     return x
 
 
-def intt(x, psi_inv_brv, n_inv, q):
+def intt_raw(x, psi_inv_brv, n_inv, q):
     """Inverse negacyclic NTT: bit-reversed eval order -> natural coeffs."""
     N = x.shape[-1]
     q3 = _as3(q)
@@ -66,9 +81,9 @@ def intt(x, psi_inv_brv, n_inv, q):
     return mm.mulmod(x, n_inv, q)
 
 
-def ntt_mont(x, psi_brv_mont, q32, qneg_inv):
+def ntt_mont_raw(x, psi_brv_mont, q32, qneg_inv):
     """Forward NTT on the u32 Montgomery datapath (twiddles pre-Montgomeryized,
-    data stays in the standard domain throughout). Oracle for kernels/ntt.py."""
+    data stays in the standard domain throughout)."""
     N = x.shape[-1]
     m, t = 1, N
     q3, qi3 = _as3(q32), _as3(qneg_inv)
@@ -84,7 +99,8 @@ def ntt_mont(x, psi_brv_mont, q32, qneg_inv):
     return x
 
 
-def intt_mont(x, psi_inv_brv_mont, n_inv_mont, q32, qneg_inv):
+def intt_mont_raw(x, psi_inv_brv_mont, n_inv_mont, q32, qneg_inv):
+    """Inverse NTT on the u32 Montgomery datapath."""
     N = x.shape[-1]
     q3, qi3 = _as3(q32), _as3(qneg_inv)
     h, t = N // 2, 1
@@ -102,3 +118,23 @@ def intt_mont(x, psi_inv_brv_mont, n_inv_mont, q32, qneg_inv):
         t *= 2
         h //= 2
     return mm.montmul(x, n_inv_mont, q32, qneg_inv)
+
+
+def _named_jit(fn, name):
+    """jit `fn` so its call sites trace as a pjit eqn named `name`."""
+    fn.__name__ = name
+    fn.__qualname__ = name
+    return jax.jit(fn)
+
+
+ntt = _named_jit(lambda x, psi_brv, q: ntt_raw(x, psi_brv, q), "ntt")
+intt = _named_jit(
+    lambda x, psi_inv_brv, n_inv, q: intt_raw(x, psi_inv_brv, n_inv, q),
+    "intt")
+ntt_mont = _named_jit(
+    lambda x, psi_m, q32, qneg: ntt_mont_raw(x, psi_m, q32, qneg),
+    "ntt_mont")
+intt_mont = _named_jit(
+    lambda x, psii_m, ninv_m, q32, qneg:
+        intt_mont_raw(x, psii_m, ninv_m, q32, qneg),
+    "intt_mont")

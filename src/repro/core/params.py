@@ -146,6 +146,7 @@ class PrimeContext:
     psi_brv_mont: jnp.ndarray             # (M, N) u32, Montgomery domain
     psi_inv_brv_mont: jnp.ndarray         # (M, N) u32
     n_inv: jnp.ndarray                    # (M, 1) u32  N^-1 mod q
+    n_inv_mont: jnp.ndarray               # (M, 1) u32, Montgomery domain
     rot_group: np.ndarray                 # (slots,) int64: 5^j mod 2N (encoding)
 
     @property
@@ -209,6 +210,10 @@ class BasisView:
     def n_inv(self):
         return self.ctx.n_inv[self.idx]
 
+    @property
+    def n_inv_mont(self):
+        return self.ctx.n_inv_mont[self.idx]
+
     def __len__(self) -> int:
         return len(self.idx)
 
@@ -254,6 +259,7 @@ def get_context(params: HEParams) -> PrimeContext:
     psi = np.empty((M, N), dtype=np.uint32)
     psii = np.empty((M, N), dtype=np.uint32)
     ninv = np.empty((M,), dtype=np.uint32)
+    ninv_m = np.empty((M,), dtype=np.uint32)
     qneg = np.empty((M,), dtype=np.uint32)
     r2 = np.empty((M,), dtype=np.uint32)
     psi_m = np.empty((M, N), dtype=np.uint32)
@@ -265,6 +271,7 @@ def get_context(params: HEParams) -> PrimeContext:
         # Montgomery-domain twiddles: tw * R mod q
         psi_m[i] = ((psi[i].astype(np.uint64) << np.uint64(32)) % np.uint64(q)).astype(np.uint32)
         psii_m[i] = ((psii[i].astype(np.uint64) << np.uint64(32)) % np.uint64(q)).astype(np.uint32)
+        ninv_m[i] = np.uint32((int(ninv[i]) << 32) % q)
 
     rot_group = np.empty(params.slots, dtype=np.int64)
     g = 1
@@ -285,5 +292,6 @@ def get_context(params: HEParams) -> PrimeContext:
         psi_brv_mont=jnp.asarray(psi_m),
         psi_inv_brv_mont=jnp.asarray(psii_m),
         n_inv=col(ninv),
+        n_inv_mont=col(ninv_m),
         rot_group=rot_group,
     )

@@ -1,6 +1,8 @@
 """RNS BaseConv — Pallas TPU kernel.
 
-The one limb-coupling sub-operation (ModUp/ModDown). Grid: (|T|, N // block).
+The one limb-coupling sub-operation (ModUp/ModDown). Grid: (|T|, ⌈N/block⌉)
+— non-block-multiple N is handled by the clamped last tile (columnwise-pure
+kernel, so recomputed overlap columns are bit-identical).
 Each step loads ALL source limbs for one coefficient tile (|S| ≤ ~44 rows —
 a (|S|, block) VMEM tile), the per-target W column, and emits one target
 limb tile. The f32 overflow-correction term v is computed in-tile.
@@ -19,8 +21,7 @@ DEFAULT_BLOCK = 2048
 
 
 def _baseconv_kernel(x_ref, hatinv_ref, qown_ref, qnegown_ref, w_ref,
-                     dmod_ref, invd_ref, qgen_ref, qneggen_ref, o_ref, *,
-                     ns: int):
+                     dmod_ref, invd_ref, qgen_ref, qneggen_ref, o_ref):
     x = x_ref[...]                                # (|S|, blk)
     q_own = qown_ref[...]                         # (|S|, 1)
     y = mm.montmul(x, hatinv_ref[...], q_own, qnegown_ref[...])
@@ -28,10 +29,8 @@ def _baseconv_kernel(x_ref, hatinv_ref, qown_ref, qnegown_ref, w_ref,
         jnp.float32), axis=0, keepdims=True) + 0.5e-6).astype(jnp.uint32)
     qg = qgen_ref[...]                            # (1, 1)
     qneg = qneggen_ref[...]
-    acc = jnp.zeros_like(y[:1])
-    for i in range(ns):                           # modular MAC over src limbs
-        acc = mm.montadd(acc, mm.montmul(y[i:i + 1], w_ref[0, i:i + 1],
-                                         qg, qneg), qg)
+    prod = mm.montmul(y, w_ref[0, :][:, None], qg, qneg)   # (|S|, blk)
+    acc = mm.montsum(prod, qg, axis=0)[None, :]   # log-depth tree reduction
     corr = mm.montmul(v, dmod_ref[...], qg, qneg)
     o_ref[...] = mm.montsub(acc, corr, qg)
 
@@ -51,8 +50,8 @@ def baseconv(x, hat_inv_m, q_own, qneg_own, W_m, D_mod_m, inv_d, q_gen,
     tcol = pl.BlockSpec((1, 1), lambda t, _j: (t, 0))
     out = pl.BlockSpec((1, block), lambda t, j: (t, j))
     return pl.pallas_call(
-        functools.partial(_baseconv_kernel, ns=ns),
-        grid=(nt, N // block),
+        _baseconv_kernel,
+        grid=(nt, pl.cdiv(N, block)),
         in_specs=[src, scol, scol, scol, wrow, tcol, scol, tcol, tcol],
         out_specs=out,
         out_shape=jax.ShapeDtypeStruct((nt, N), jnp.uint32),

@@ -6,6 +6,11 @@ all log2(N) butterfly stages in-register/VMEM — the streaming-permutation +
 ALU pipeline of the paper's PE collapsed into one resident pass. This is the
 TPU answer to FPGA fine-grained reuse: one HBM read + one write per limb per
 NTT instead of log N round trips.
+
+The butterfly stage recursion itself lives in core/ntt.py (`ntt_mont_raw` /
+`intt_mont_raw`) — shape-polymorphic, so the kernel bodies call it directly
+on a flat (N,) row with scalar modulus. One source of truth; the kernels
+only contribute the VMEM residency/grid structure.
 """
 from __future__ import annotations
 
@@ -15,54 +20,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import modmath as mm
+from repro.core import ntt as core_ntt
 
 
-def _ntt_body(x, tw, q, qneg, N):
-    m, t = 1, N
-    while m < N:
-        t //= 2
-        xv = x.reshape(m, 2, t)
-        s = jax.lax.dynamic_slice(tw, (m,), (m,))[:, None] if False else \
-            tw[m: 2 * m][:, None]
-        u = xv[:, 0, :]
-        v = mm.montmul(xv[:, 1, :], s, q, qneg)
-        x = jnp.stack([mm.montadd(u, v, q), mm.montsub(u, v, q)],
-                      axis=1).reshape(N)
-        m *= 2
-    return x
+def _ntt_kernel(x_ref, tw_ref, q_ref, qneg_ref, o_ref):
+    o_ref[0, 0, :] = core_ntt.ntt_mont_raw(
+        x_ref[0, 0, :], tw_ref[0, :], q_ref[0, 0], qneg_ref[0, 0])
 
 
-def _intt_body(x, tw, ninv, q, qneg, N):
-    h, t = N // 2, 1
-    while h >= 1:
-        xv = x.reshape(h, 2, t)
-        s = tw[h: 2 * h][:, None]
-        u, v = xv[:, 0, :], xv[:, 1, :]
-        x = jnp.stack(
-            [mm.montadd(u, v, q),
-             mm.montmul(mm.montsub(u, v, q), s, q, qneg)],
-            axis=1).reshape(N)
-        t *= 2
-        h //= 2
-    return mm.montmul(x, ninv, q, qneg)
-
-
-def _ntt_kernel(x_ref, tw_ref, q_ref, qneg_ref, o_ref, *, N):
-    x = x_ref[0, 0, :]
-    tw = tw_ref[0, :]
-    q = q_ref[0, 0]
-    qneg = qneg_ref[0, 0]
-    o_ref[0, 0, :] = _ntt_body(x, tw, q, qneg, N)
-
-
-def _intt_kernel(x_ref, tw_ref, ninv_ref, q_ref, qneg_ref, o_ref, *, N):
-    x = x_ref[0, 0, :]
-    tw = tw_ref[0, :]
-    q = q_ref[0, 0]
-    qneg = qneg_ref[0, 0]
-    ninv = ninv_ref[0, 0]
-    o_ref[0, 0, :] = _intt_body(x, tw, ninv, q, qneg, N)
+def _intt_kernel(x_ref, tw_ref, ninv_ref, q_ref, qneg_ref, o_ref):
+    o_ref[0, 0, :] = core_ntt.intt_mont_raw(
+        x_ref[0, 0, :], tw_ref[0, :], ninv_ref[0, 0],
+        q_ref[0, 0], qneg_ref[0, 0])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -74,7 +43,7 @@ def ntt(x, psi_m, q32, qneg, *, interpret: bool = True):
     tw = pl.BlockSpec((1, N), lambda _b, i: (i, 0))
     const = pl.BlockSpec((1, 1), lambda _b, i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_ntt_kernel, N=N),
+        _ntt_kernel,
         grid=(B, M),
         in_specs=[poly, tw, const, const],
         out_specs=poly,
@@ -90,7 +59,7 @@ def intt(x, psii_m, ninv_m, q32, qneg, *, interpret: bool = True):
     tw = pl.BlockSpec((1, N), lambda _b, i: (i, 0))
     const = pl.BlockSpec((1, 1), lambda _b, i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_intt_kernel, N=N),
+        _intt_kernel,
         grid=(B, M),
         in_specs=[poly, tw, const, const, const],
         out_specs=poly,

@@ -53,15 +53,23 @@ def test_design_sections_cited_by_code_exist():
     serve §5, repro.analysis §6 — the numbered sections must keep existing
     (and keep their subjects)."""
     design = (ROOT / "DESIGN.md").read_text()
-    for anchor in ("## §1", "## §2", "## §3", "## §4", "## §5", "## §6"):
+    for anchor in ("## §1", "## §2", "## §3", "## §4", "## §5", "## §6",
+                   "## §7"):
         assert anchor in design, anchor
     assert "diagonal" in design.split("## §2")[1].split("## §3")[0].lower()
     assert "word-size" in design.split("## §3")[1].split("## §4")[0].lower()
     assert "tenant" in design.split("## §5")[1].split("## §6")[0].lower()
     # §6 is the verifier's rule catalog — every rule family must be listed
-    sec6 = design.split("## §6")[1]
-    for rule in ("LS001", "JX001", "VM001", "AR001", "VF000"):
+    sec6 = design.split("## §6")[1].split("## §7")[0]
+    for rule in ("LS001", "JX001", "JX004", "VM001", "AR001", "VF000"):
         assert rule in sec6, rule
+    # §7 is the fused base-change datapath — stage coverage + knob
+    sec7 = design.split("## §7")[1]
+    for word in ("datapath", "hoist", "ModDown", "psum", "JX004"):
+        assert word in sec7, word
+    # the §2 schedule table carries the stage-coverage columns
+    sec2 = design.split("## §2")[1].split("## §3")[0]
+    assert "Stage coverage" in sec2 and "ModDown+Rescale" in sec2
 
 
 def test_readme_links_rule_catalog():

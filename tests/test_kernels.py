@@ -162,8 +162,11 @@ def test_fused_hlt_indexed_kernel(logN, H, S, B, d, nbeta, chunk):
     np.testing.assert_array_equal(np.asarray(got1), np.asarray(want1))
 
 
-@pytest.mark.parametrize("logN", [5, 6, 7])
-def test_baseconv_kernel(logN):
+@pytest.mark.parametrize("logN,block", [(5, 32), (6, 32), (7, 32),
+                                        (5, 24), (6, 48)])
+def test_baseconv_kernel(logN, block):
+    """block=24/48 do NOT divide N — the clamped last tile recomputes
+    overlap columns, which must stay bit-identical (columnwise-pure)."""
     ctx = _ctx(logN=logN, L=4, k=3, beta=2)
     from repro.core.rns import RnsTools
     tools = RnsTools(ctx)
@@ -189,7 +192,8 @@ def test_baseconv_kernel(logN):
     qneg_gen = jnp.asarray(np.array(
         [[mm.mont_constants(int(q))[0]] for q in qs_gen[:, 0]], np.uint32))
     got = ops.baseconv(jnp.asarray(x), hat_inv_m, q_own, qneg_own, W_m,
-                       D_mod_m, jnp.asarray(inv_d), q_gen, qneg_gen, block=32)
+                       D_mod_m, jnp.asarray(inv_d), q_gen, qneg_gen,
+                       block=block)
     # oracle 1: the mont ref
     want = ref.baseconv_ref(jnp.asarray(x), hat_inv_m, W_m[:, :, None],
                             D_mod_m, jnp.asarray(inv_d), q_own, qneg_own,
