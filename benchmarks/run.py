@@ -19,6 +19,10 @@ quantity: counts, MB, speedups, ...). Sections:
   serve    — multi-tenant secure serving: cross-request batched (one launch
              per decode step) vs per-request secure-layer calls, operand
              bytes, shared-prompt hoist dedup (BENCH_serve.json)
+  chain    — consecutive HE MM chains (compile_hemm_chain): the fully
+             encrypted k-hop chain vs the decrypt-between-hops baseline
+             (wall time + the decrypt/re-encrypt round-trips it removes),
+             per-hop levels and operand bytes (BENCH_chain.json)
   kernels  — Pallas kernel calls (interpret mode) vs jnp oracle
   roofline — §Roofline table from results/dryrun/*.json (if present)
 
@@ -49,7 +53,7 @@ import numpy as np
 RESULTS: dict = {}
 
 # sections that get their own BENCH_<name>.json next to the --json path
-SPLIT_SECTIONS = ("blockmm", "dist", "serve")
+SPLIT_SECTIONS = ("blockmm", "dist", "serve", "chain")
 
 # BENCH_*.json output contract: required keys per structured section.  The
 # CI smoke steps write these files and downstream tooling tracks each perf
@@ -64,6 +68,9 @@ BENCH_SCHEMA = {
     "serve": ("requests_per_step", "batched_us", "per_request_us",
               "batched_speedup_x", "launches_per_step", "operand_bytes",
               "hoist_dedup_saved_bytes", "program_cache", "session_pool"),
+    "chain": ("dims", "depth", "chained_us", "decrypt_hops_us",
+              "chained_speedup_x", "decrypts_removed", "hop_levels",
+              "hop_bytes", "operand_bytes", "schedules"),
 }
 
 
@@ -462,6 +469,77 @@ def bench_serve(smoke: bool = False):
     }
 
 
+def bench_chain(smoke: bool = False):
+    """Consecutive HE MM chains (core/compile.py compile_hemm_chain): the
+    fully encrypted k-hop chain Y = X·W1·…·Wk as ONE compiled program vs
+    the decrypt-between-hops baseline (one top-level hemm per hop with a
+    decrypt + two re-encrypts in between — what stacked SecureLinear
+    layers used to do).  The chain removes k-1 client round-trips AND runs
+    every hop at a descending level (cheaper limbs per hop), at the price
+    of needing 3·k levels of modulus chain (see
+    configs/fame_sets.py FAME_CHAIN_SETS for the β sizing)."""
+    from repro.configs.fame_sets import FAME_CHAIN_SETS
+    from repro.core.ckks import CkksEngine
+    from repro.core.compile import HEContext, compile_hemm,\
+        compile_hemm_chain
+    from repro.core.hemm import (decrypt_matrix, encrypt_matrix,
+                                 plan_hemm_chain)
+
+    reps = 1 if smoke else 3
+    depth = 2 if smoke else 3
+    rng = np.random.default_rng(0)
+    ctx = HEContext(CkksEngine(FAME_CHAIN_SETS["fame-s-chain"]))
+    eng = ctx.eng
+    dims = (3,) * (depth + 2)
+    chain = plan_hemm_chain(eng, dims)
+    ctx.keygen(rng, rot_steps=chain.rot_steps)
+    prog = compile_hemm_chain(ctx, chain)
+    X = rng.uniform(-0.5, 0.5, (dims[0], dims[1]))
+    Ws = [rng.uniform(-0.5, 0.5, (dims[h + 1], dims[h + 2]))
+          for h in range(depth)]
+    ctX = encrypt_matrix(eng, ctx.keys, X, rng)
+    w_cts = prog.encrypt_weights(Ws, rng)
+    us_chain, out = _t(lambda: prog(ctX, w_cts), reps=reps)
+    _block(out)
+
+    # baseline: decrypt/re-encrypt between hops, every hop at top level
+    base_progs = [compile_hemm(ctx, hp) for hp in chain.hops]
+
+    def decrypt_between_hops():
+        y = X
+        for bp, hp, W in zip(base_progs, chain.hops, Ws):
+            cty = encrypt_matrix(eng, ctx.keys, y, rng)
+            ctw = encrypt_matrix(eng, ctx.keys, W, rng)
+            y = decrypt_matrix(eng, ctx.keys, bp(cty, ctw), hp.m, hp.n)
+        return y
+
+    us_hops, y = _t(decrypt_between_hops, reps=reps)
+    Y = decrypt_matrix(eng, ctx.keys, out, dims[0], dims[-1])
+    assert np.abs(Y - y).max() < 5e-4   # the two pipelines must agree
+
+    name = "x".join(str(d) for d in dims)
+    row(f"chain/{name}/chained", us_chain,
+        f"depth={depth};hop_levels={list(prog.plan.hop_levels)};"
+        f"schedules={list(prog.plan.schedules)}")
+    row(f"chain/{name}/decrypt_between_hops", us_hops,
+        f"chained_speedup={us_hops / us_chain:.2f}x;"
+        f"decrypts_removed={depth - 1};reencrypts_removed={2 * depth - 1}")
+    row(f"chain/{name}/operands", None,
+        f"per_hop_B={list(prog.plan.hop_bytes)};"
+        f"total_B={prog.plan.operand_bytes}")
+    RESULTS["chain"] = {
+        "dims": list(dims), "depth": depth,
+        "chained_us": round(us_chain, 1),
+        "decrypt_hops_us": round(us_hops, 1),
+        "chained_speedup_x": round(us_hops / us_chain, 2),
+        "decrypts_removed": depth - 1,
+        "hop_levels": list(prog.plan.hop_levels),
+        "hop_bytes": list(prog.plan.hop_bytes),
+        "operand_bytes": prog.plan.operand_bytes,
+        "schedules": list(prog.plan.schedules),
+    }
+
+
 def bench_kernels():
     import jax.numpy as jnp
     from repro.core.params import toy_params, get_context
@@ -517,8 +595,8 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = [bench_table1, bench_table2_costmodel, bench_fig6_schedules,
-                bench_blockmm, bench_dist, bench_serve, bench_kernels,
-                bench_roofline]
+                bench_blockmm, bench_dist, bench_serve, bench_chain,
+                bench_kernels, bench_roofline]
     for fn in sections:
         if args.section and args.section not in fn.__name__:
             continue

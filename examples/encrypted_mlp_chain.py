@@ -1,0 +1,41 @@
+"""A 2-layer encrypted MLP block as ONE chained HE program.
+
+``SecureLinear(chain=(W2,))`` compiles x @ W1 @ W2 via
+``compile_hemm_chain`` (DESIGN.md §8): hop 1's output ciphertext feeds
+hop 2 directly — no decrypt/re-encrypt round-trip between the layers,
+each weight encrypted once at its hop's input level.  The modulus chain
+pays 3 levels per hop, so this needs a chain-capable parameter set
+(configs/fame_sets.py FAME_CHAIN_SETS, L = 9 -> up to 3 hops).
+
+    PYTHONPATH=src python examples/encrypted_mlp_chain.py
+"""
+import numpy as np
+
+import repro  # noqa: F401
+from repro.configs.fame_sets import FAME_CHAIN_SETS
+from repro.secure import SecureLinear, SecureMatmulEngine
+
+rng = np.random.default_rng(1)
+
+# x(rows x d_in) @ W1(d_in x d_hidden) @ W2(d_hidden x d_out), all encrypted
+rows, d_in, d_hidden, d_out = 4, 5, 6, 3
+W1 = rng.uniform(-0.5, 0.5, (d_in, d_hidden))
+W2 = rng.uniform(-0.5, 0.5, (d_hidden, d_out))
+
+engine = SecureMatmulEngine(FAME_CHAIN_SETS["fame-m-chain"], tile=4)
+# chain mode is single-ciphertext: the row count of x is fixed up front
+# because the chain plan's σ/τ transforms are shape-specific
+mlp = SecureLinear(engine, W1, rng, chain=(W2,), chain_rows=rows)
+
+x = rng.uniform(-0.5, 0.5, (rows, d_in))
+d0 = engine.eng.op_counts["decrypts"]
+y_secure = mlp(x, rng, secure=True)      # one chained program, two hops
+y_plain = mlp(x, rng, secure=False)
+
+# exactly ONE decrypt happened: the final output (zero between the hops)
+assert engine.eng.op_counts["decrypts"] - d0 == 1
+
+err = np.abs(y_secure - y_plain).max()
+print("chained encrypted MLP vs plaintext, max error:", err)
+assert err < 1e-3
+print("ok: 2-layer encrypted MLP ran as one chain, no intermediate decrypt")

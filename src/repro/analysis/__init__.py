@@ -17,11 +17,12 @@ the ``configs/fame_sets.py`` verification parameter sets.
 from repro.analysis.diagnostics import (RULES, Diagnostic, VerificationError,
                                         VerificationWarning, format_report)
 from repro.analysis.level_scale import (CtState, ScaleTracker, Trace,
-                                        trace_chain, trace_hemm, trace_hlt)
+                                        max_chain_depth, trace_chain,
+                                        trace_hemm, trace_hlt)
 from repro.analysis.verify import verify_program
 
 __all__ = [
     "RULES", "Diagnostic", "VerificationError", "VerificationWarning",
-    "format_report", "CtState", "ScaleTracker", "Trace", "trace_chain",
-    "trace_hemm", "trace_hlt", "verify_program",
+    "format_report", "CtState", "ScaleTracker", "Trace", "max_chain_depth",
+    "trace_chain", "trace_hemm", "trace_hlt", "verify_program",
 ]

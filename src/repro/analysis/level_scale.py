@@ -12,10 +12,12 @@ Rules emitted (DESIGN.md §6): LS001 level underflow, LS002 scale mismatch
 at adds, LS003 rescale past the modulus chain, LS004 operand level
 mismatch.
 
-The ``trace_*`` helpers are the ``trace()`` API a future
-``compile_hemm_chain`` consumes (ROADMAP "consecutive HE MM chains"):
-``trace_chain`` proves a multi-hop Y = X·W1·W2·… fits the modulus chain
-before anything executes.
+The ``trace_*`` helpers are the ``trace()`` API ``compile_hemm_chain``
+consumes (core/compile.py): ``trace_chain`` proves a multi-hop
+Y = X·W1·W2·… fits the modulus chain before anything executes,
+``Trace.hop_states`` carries the per-hop (level, scale) prediction that
+execution must match exactly, and ``max_chain_depth`` turns a parameter
+set into its provable hop budget.
 """
 from __future__ import annotations
 
@@ -58,11 +60,17 @@ class TraceStep:
 
 @dataclasses.dataclass(frozen=True)
 class Trace:
-    """A completed symbolic execution: final state, per-op steps, findings."""
+    """A completed symbolic execution: final state, per-op steps, findings.
+
+    ``hop_states`` is populated by :func:`trace_chain` only — the predicted
+    ``CtState`` at the OUTPUT of each chain hop, in hop order, so execution
+    can be compared against the prediction hop by hop (not just end-to-end).
+    """
 
     out: CtState
     steps: tuple
     diagnostics: tuple
+    hop_states: tuple = ()
 
     @property
     def ok(self) -> bool:
@@ -273,7 +281,27 @@ def trace_chain(moduli: Sequence[float], hops, *, level: int, scale: float,
     t = ScaleTracker(moduli, rtol=rtol, program="chain")
     state = CtState(level, scale)
     ws = scale if weight_scale is None else weight_scale
+    hop_states = []
     for h, hop in enumerate(hops):
         state = t.hemm(state, CtState(state.level, ws),
                        **_hop_scales(hop), stage=f"hop[{h}]")
-    return t.trace()
+        hop_states.append(state)
+    return dataclasses.replace(t.trace(), hop_states=tuple(hop_states))
+
+
+def max_chain_depth(moduli: Sequence[float], hop, *, level: int, scale: float,
+                    weight_scale: Optional[float] = None,
+                    rtol: float = DEFAULT_RTOL) -> int:
+    """Largest k such that a k-hop chain of ``hop`` (HeMMPlan or scales
+    dict) traces cleanly from ``(level, scale)`` — the provable chain depth
+    of a parameter set.  Each hemm hop consumes 3 levels and the last hop
+    needs 3 to itself, so for the standard plan this is ``level // 3``;
+    this helper PROVES it through the tracer instead of assuming it."""
+    depth = 0
+    while depth <= len(moduli):
+        if not trace_chain(moduli, [hop] * (depth + 1), level=level,
+                           scale=scale, weight_scale=weight_scale,
+                           rtol=rtol).ok:
+            return depth
+        depth += 1
+    return depth

@@ -89,6 +89,27 @@ def verify_blockmm(prog, *, components: bool = True) -> list:
     return diags
 
 
+def verify_chain(prog, *, components: bool = True) -> list:
+    """Whole-chain level/scale trace of an HEMMChainProgram: one
+    ``trace_chain`` over the effective hop plans (including any explicit
+    re-pack σ) from the chain's input level, plus the per-hop HEMMProgram
+    passes when ``components``."""
+    from repro.analysis.level_scale import trace_chain
+    diags = arena.check_generation(prog, program="chain")
+    if diags:
+        return diags
+    tr = trace_chain(_moduli(prog.ctx),
+                     [hp.mm_plan for hp in prog._hops],
+                     level=prog.plan.level,
+                     scale=prog.ctx.eng.params.scale,
+                     weight_scale=prog.plan.weight_scale)
+    diags += list(tr.diagnostics)
+    if components:
+        for hp in prog._hops:
+            diags += verify_hemm(hp, components=True)
+    return diags
+
+
 def verify_program(prog, *, components: bool = True) -> list:
     """Dispatch on the compiled-program type; returns every finding."""
     from repro.core import compile as compile_mod
@@ -98,6 +119,8 @@ def verify_program(prog, *, components: bool = True) -> list:
         return verify_hemm(prog, components=components)
     if isinstance(prog, compile_mod.BlockMMProgram):
         return verify_blockmm(prog, components=components)
+    if isinstance(prog, compile_mod.HEMMChainProgram):
+        return verify_chain(prog, components=components)
     raise TypeError(f"not a compiled HE program: {type(prog).__name__}")
 
 

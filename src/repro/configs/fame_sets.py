@@ -61,3 +61,19 @@ FAME_VERIFY_SETS = {
     "fame-m-rt": toy_params(logN=7, L=5, k=2, beta=3, scale_bits=26,
                             name="fame-m-rt"),
 }
+
+# Chain-capable twins of the verification sets: same ring sizes, a modulus
+# chain deep enough for 3 consecutive hemm hops (each hop consumes 3 levels,
+# so L = 9 proves exactly ``max_chain_depth`` = 3).  β is raised so hybrid
+# keyswitching digits stay at 2 main primes (~2^55) under the special
+# modulus P (k·30 bits) — with the verify sets' β the deeper chain packs
+# 4–5 primes per digit, the digit product overruns P and keyswitch noise
+# destroys even the FIRST hop.  The verify sets themselves stay L = 4/5:
+# on them any chain of depth >= 2 must be REJECTED at compile
+# (tests/test_hemm_chain.py pins that boundary).
+FAME_CHAIN_SETS = {
+    "fame-s-chain": toy_params(logN=6, L=9, k=3, beta=5, scale_bits=26,
+                               name="fame-s-chain"),
+    "fame-m-chain": toy_params(logN=7, L=9, k=2, beta=5, scale_bits=26,
+                               name="fame-m-chain"),
+}

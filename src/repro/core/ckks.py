@@ -88,6 +88,9 @@ class CkksEngine:
         self.ctx: PrimeContext = get_context(params)
         self.tools = RnsTools(self.ctx)
         self._fused_tabs: dict = {}
+        # monotonic boundary-crossing counters: chained programs prove their
+        # zero-intermediate-decrypt claim by asserting "decrypts" deltas
+        self.op_counts: dict = {"encrypts": 0, "decrypts": 0}
 
     # -- basis helpers ------------------------------------------------------
 
@@ -281,6 +284,7 @@ class CkksEngine:
     # -- encrypt / decrypt ----------------------------------------------------
 
     def encrypt(self, pt: Plaintext, keys: Keys, rng: np.random.Generator) -> Ciphertext:
+        self.op_counts["encrypts"] += 1
         idx = list(range(pt.level + 1))
         view = self.basis(idx)
         a = self._uniform_poly(rng, idx)
@@ -293,6 +297,7 @@ class CkksEngine:
         return Ciphertext(c0=c0, c1=a, level=pt.level, scale=pt.scale)
 
     def decrypt(self, ct: Ciphertext, keys: Keys) -> Plaintext:
+        self.op_counts["decrypts"] += 1
         view = self.main_basis(ct.level)
         data = mm.addmod(
             ct.c0, mm.mulmod(ct.c1, keys.s_eval[: ct.level + 1], view.moduli),

@@ -42,7 +42,8 @@ from repro.core import hlt as hlt_mod, hlt_dist
 from repro.core.ckks import Ciphertext, CkksEngine, Keys
 from repro.core.costmodel import (VMEM_HEADROOM, hlt_hoist_bytes,
                                   hlt_stage_costs, pick_rotation_chunk,
-                                  select_schedule, sharded_collective_bytes)
+                                  select_chain_schedules, select_schedule,
+                                  sharded_collective_bytes)
 from repro.core.hlt import DiagSet, Hoisted, hoist, hoist_batched
 from repro.distributed.sharding import logical_axis_size, make_rules
 
@@ -1170,6 +1171,234 @@ def compile_blockmm(ctx: HEContext, plan, grid, *,
                     schedule=schedule, level=level,
                     step1=step1.plan, step2=step2.plan),
         step1, step2)
+    _enforce_verify(ctx, prog)
+    ctx._compiled[memo_key] = prog
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# compile_hemm_chain -> HEMMChainProgram (Y = X·W1·…·Wk, zero decrypts)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HEMMChainPlan:
+    """Inspectable compile summary for a consecutive HE MM chain.
+
+    ``dims = (m, l, n1, …, nk)``; hop h multiplies the running m×dims[h+1]
+    ciphertext by a dims[h+1]×dims[h+2] weight.  ``hop_levels`` are the
+    per-hop INPUT levels (``level - 3h`` — each hemm consumes 3);
+    ``hop_out`` the ``trace_chain``-predicted (level, scale) state at each
+    hop's OUTPUT, which execution matches float-exactly; ``schedules`` the
+    jointly selected per-hop HLT schedules (``select_chain_schedules``).
+    """
+
+    dims: tuple
+    shapes: tuple                       # (m, l, n) per hop
+    schedules: tuple
+    level: int                          # chain input level
+    hop_levels: tuple                   # input level per hop
+    hop_out: tuple                      # CtState out of each hop (predicted)
+    weight_scale: float                 # weight scale the trace assumed
+    repack: str                         # "fold" | "explicit" (HeMMChainPlan)
+    hops: tuple                         # per-hop HEMMPlan
+
+    @property
+    def k(self) -> int:
+        """Number of hops (matrix multiplications) in the chain."""
+        return len(self.hops)
+
+    @property
+    def depth(self) -> int:
+        """Multiplicative depth: 3 levels per hop."""
+        return 3 * self.k
+
+    @property
+    def out_level(self) -> int:
+        """Level of the final output ciphertext (``level - 3k``)."""
+        return self.hop_out[-1].level
+
+    @property
+    def out_scale(self) -> float:
+        """Scale of the final output ciphertext (trace-predicted)."""
+        return self.hop_out[-1].scale
+
+    @property
+    def rotations(self) -> int:
+        """Total rotation count across all hops (Table-I accounting)."""
+        return sum(h.rotations for h in self.hops)
+
+    @property
+    def hop_bytes(self) -> tuple:
+        """Per-hop deduped operand bytes (keys + diagonals, both stages)."""
+        return tuple(h.operand_bytes for h in self.hops)
+
+    @property
+    def operand_bytes(self) -> int:
+        """Arena-resident operand bytes for the whole chain (deduped)."""
+        return sum(self.hop_bytes)
+
+    @property
+    def hoist_bytes(self) -> int:
+        """Hoisting-product bytes after ct-slot dedup: each hop's Step 2
+        stores 2 unique products (one per input), never 2·l."""
+        return sum(h.hoist_bytes for h in self.hops)
+
+    @property
+    def collective_bytes(self) -> int:
+        """Predicted cross-device bytes per execution — under the sharded
+        schedule exactly 2 merged-ModDown psums per hop, nothing between
+        hops (the re-pack is an identity fold, Mult/Rescale/Add are
+        limb-local)."""
+        return sum(h.collective_bytes for h in self.hops)
+
+
+class HEMMChainProgram:
+    """A compiled chain: ``prog(ctX, [ctW1, …, ctWk]) -> ctY`` with Y =
+    X·W1·…·Wk entirely under encryption — no decrypt round-trip between
+    hops.
+
+    Hop h's column-major m×n output occupies slots [0, m·n) and IS hop
+    h+1's σ input encoding (the identity re-pack fold, core/hemm.py
+    :class:`~repro.core.hemm.ChainRepack`), so hops connect by plain
+    dataflow: each intermediate stays a ciphertext at the traced
+    (level, scale).  Weights enter at their hop's input level
+    (:meth:`encrypt_weights`).
+
+    Counter semantics: one call bumps ``program_launches`` by k+1 (the
+    chain itself + each hop's HEMMProgram) and ``hlt_launches`` by 2·k
+    under batched schedules (Step-1 + Step-2 launch per hop); the engine's
+    ``op_counts["decrypts"]`` stays untouched — the zero-intermediate-
+    decrypt claim tests assert.
+    """
+
+    def __init__(self, ctx: HEContext, chain, plan: HEMMChainPlan, hops):
+        self.ctx = ctx
+        self.chain = chain                  # core/hemm.py HeMMChainPlan
+        self.plan = plan
+        self._hops = tuple(hops)            # per-hop HEMMProgram
+        self._gen = ctx._generation
+
+    def encrypt_weights(self, Ws, rng) -> list:
+        """Encrypt W1..Wk at their hop input levels (``plan.hop_levels``)
+        with ``plan.weight_scale`` — exactly the weight states the compile
+        trace assumed, so execution matches ``plan.hop_out`` float-exactly."""
+        from repro.core.hemm import encrypt_matrix
+        plan = self.plan
+        assert len(Ws) == plan.k, (len(Ws), plan.k)
+        cts = []
+        for W, (_, l, n), lvl in zip(Ws, plan.shapes, plan.hop_levels,
+                                     strict=True):
+            W = np.asarray(W, dtype=np.float64)
+            assert W.shape == (l, n), (W.shape, (l, n))
+            cts.append(encrypt_matrix(self.ctx.eng, self.ctx.keys, W, rng,
+                                      level=lvl, scale=plan.weight_scale))
+        return cts
+
+    def run_hops(self, ctX: Ciphertext, weights) -> list:
+        """Run the chain, returning every hop's output ciphertext (the last
+        is the chain output) — the per-hop handle the trace-exactness tests
+        compare against ``plan.hop_out``."""
+        self.ctx._check_generation(self._gen)
+        self.ctx.counters["program_launches"] += 1
+        plan = self.plan
+        assert ctX.level == plan.level, (ctX.level, plan.level)
+        assert len(weights) == plan.k, (len(weights), plan.k)
+        ct, outs = ctX, []
+        for h, (prog, ctW) in enumerate(zip(self._hops, weights,
+                                            strict=True)):
+            assert ctW.level == plan.hop_levels[h], \
+                f"hop {h} weight at level {ctW.level}, chain expects " \
+                f"{plan.hop_levels[h]} (encrypt_weights encrypts correctly)"
+            ct = prog(ct, ctW)
+            outs.append(ct)
+        return outs
+
+    def __call__(self, ctX: Ciphertext, weights) -> Ciphertext:
+        return self.run_hops(ctX, weights)[-1]
+
+
+def compile_hemm_chain(ctx: HEContext, chain, *, level: Optional[int] = None,
+                       schedule: Optional[str] = None,
+                       schedules: Optional[Sequence[str]] = None,
+                       rotation_chunk: Optional[int] = None,
+                       weight_scale: Optional[float] = None
+                       ) -> HEMMChainProgram:
+    """Compile a consecutive HE MM chain (core/hemm.py ``plan_hemm_chain``)
+    into a reusable :class:`HEMMChainProgram`.
+
+    The compile is trace-first: ``repro.analysis.trace_chain`` runs over
+    the hop plans BEFORE anything is built.  A chain deeper than the
+    modulus chain allows (input ``level`` < 3·k — the trace's LS001/LS003
+    findings) cannot compile: under ``ctx.verify="error"`` it raises
+    :class:`~repro.analysis.VerificationError` carrying the trace
+    diagnostics; under ``"warn"``/``"off"`` it raises ``ValueError`` (there
+    is no silent wrong-answer region — an unfittable chain NEVER returns a
+    program).  ``repro.analysis.max_chain_depth`` names the largest k that
+    fits.
+
+    ``schedule`` forces one schedule for every hop; ``schedules`` gives an
+    explicit per-hop tuple; with neither, ``select_chain_schedules``
+    chooses per-hop schedules JOINTLY — the exact ``select_schedule`` byte
+    terms per hop plus an ICI-penalized boundary term when adjacent hops
+    change residency class (a hop's output layout is the next hop's input).
+    Memoized on the context like every other compile.
+    """
+    assert ctx.keys is not None, "HEContext has no keys; call ctx.keygen()"
+    eng = ctx.eng
+    params = eng.params
+    level = params.L if level is None else level
+    ws = params.scale if weight_scale is None else float(weight_scale)
+    k = chain.k
+
+    from repro.analysis.level_scale import trace_chain   # deferred: analysis
+    trace = trace_chain(eng.ctx.moduli_host, chain.hops, level=level,
+                        scale=params.scale, weight_scale=ws)
+    if level < 3 * k:       # == the trace's LS001/LS003 findings fire
+        if ctx.verify == "error":
+            from repro.analysis.diagnostics import VerificationError
+            raise VerificationError(trace.diagnostics)
+        msgs = "; ".join(str(d) for d in trace.diagnostics
+                         if d.severity == "error")
+        raise ValueError(
+            f"chain of {k} hops needs input level >= {3 * k} "
+            f"(3 per hemm hop), got {level}: {msgs}")
+
+    if schedule is not None:
+        assert schedules is None, "pass schedule= or schedules=, not both"
+        scheds = (schedule,) * k
+    elif schedules is not None:
+        scheds = tuple(schedules)
+        assert len(scheds) == k, (len(scheds), k)
+    else:
+        scheds = select_chain_schedules(
+            params,
+            [dict(d=hp.ds_sigma.d, ctb=2 * hp.l, n_uniq=2,
+                  nbeta=len(eng.tools.digit_bases(level - 3 * h)),
+                  level=level - 3 * h)
+             for h, hp in enumerate(chain.hops)],
+            headroom=ctx.vmem_headroom,
+            n_model=ctx.n_model, n_ct=ctx.n_ct)
+
+    memo_key = ("hemm_chain", _StrongKey(chain), scheds, level,
+                rotation_chunk, ws, ctx.verify)
+    hit = ctx._compiled.get(memo_key)
+    if hit is not None:
+        return hit
+
+    hop_progs = [
+        compile_hemm(ctx, hp, level=level - 3 * h, schedule=scheds[h],
+                     rotation_chunk=rotation_chunk)
+        for h, hp in enumerate(chain.hops)]
+    plan = HEMMChainPlan(
+        dims=chain.dims,
+        shapes=tuple((hp.m, hp.l, hp.n) for hp in chain.hops),
+        schedules=scheds, level=level,
+        hop_levels=tuple(level - 3 * h for h in range(k)),
+        hop_out=trace.hop_states,
+        weight_scale=ws, repack=chain.repack,
+        hops=tuple(p.plan for p in hop_progs))
+    prog = HEMMChainProgram(ctx, chain, plan, hop_progs)
     _enforce_verify(ctx, prog)
     ctx._compiled[memo_key] = prog
     return prog

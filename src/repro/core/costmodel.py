@@ -205,6 +205,19 @@ def select_schedule(params: "HEParams", nbeta: int | None = None,
         # splits the ROWS, not the per-row working set — if even chunk=1
         # overflows VMEM on one device it overflows on every rank too
         return single
+    single_dev, shard_dev = _hlt_device_costs(
+        params, nbeta=nbeta, d=d, ctb=ctb, n_uniq=n_uniq,
+        n_model=n_model, n_ct=n_ct, dedup_hoist=dedup_hoist)
+    return "sharded" if shard_dev < single_dev else single
+
+
+def _hlt_device_costs(params: "HEParams", *, nbeta: int, d: int | None,
+                      ctb: int | None, n_uniq: int | None,
+                      n_model: int, n_ct: int,
+                      dedup_hoist: bool = True) -> tuple[float, float]:
+    """(single-device bytes, per-device sharded bytes) of one HLT launch —
+    the two sides of ``select_schedule``'s inequality, factored out so
+    ``select_chain_schedules`` prices hops with the SAME terms."""
     d_eff = _DEFAULT_D if d is None else d
     ctb_eff = max(1, ctb or 1)
     uniq = ctb_eff if n_uniq is None else max(1, min(n_uniq, ctb_eff))
@@ -216,7 +229,76 @@ def select_schedule(params: "HEParams", nbeta: int | None = None,
     shard_dev = (operand * b_pad / (n_model * n_ct) + shard_hoist
                  + ICI_PENALTY * sharded_collective_bytes(
                      params, n_model=n_model, ctb=b_pad // n_ct))
-    return "sharded" if shard_dev < single_dev else single
+    return single_dev, shard_dev
+
+
+def chain_boundary_bytes(params: "HEParams", *,
+                         level: int | None = None) -> float:
+    """ICI-penalized bytes to re-lay a chained ciphertext out when adjacent
+    hops change residency class (single-device ↔ limb-sharded): both (c0,c1)
+    limb tensors at the boundary level cross the interconnect once, weighted
+    with the same ``ICI_PENALTY`` as the in-schedule collective."""
+    n_limbs = (params.L if level is None else level) + 1
+    return ICI_PENALTY * 2.0 * n_limbs * 4.0 * params.N
+
+
+def select_chain_schedules(params: "HEParams", hops, *,
+                           vmem_bytes: float = VMEM_BYTES,
+                           headroom: float | None = None,
+                           n_model: int = 1, n_ct: int = 1) -> tuple:
+    """Joint per-hop schedule pick for ``compile_hemm_chain`` (DESIGN.md §8).
+
+    ``hops`` is a sequence of per-hop dicts: ``d`` (rotation count of the
+    hop's widest HLT), ``ctb`` (HLT batch — hemm Step-2's 2·l), ``n_uniq``
+    (unique inputs — 2), ``nbeta`` (digit count at the hop's input level)
+    and ``level`` (the hop's input level, pricing its boundary ciphertext).
+
+    k independent ``select_schedule`` calls ignore that hop h's output
+    layout IS hop h+1's input layout: flipping residency class between hops
+    (single-device ↔ sharded) moves the chained ciphertext across the
+    interconnect once per flip (``chain_boundary_bytes``).  This pass runs a
+    two-state dynamic program over the hop sequence — per-hop device bytes
+    from ``_hlt_device_costs`` (the exact ``select_schedule`` terms) plus
+    the transition penalty on class changes — so a middle hop that would
+    flip in isolation stays put when the two re-layouts cost more than the
+    flip saves.  With one device, or a single hop, the result degenerates
+    to per-hop ``select_schedule`` picks.
+    """
+    headroom = VMEM_HEADROOM if headroom is None else headroom
+    n_model, n_ct = max(1, n_model), max(1, n_ct)
+    row = 4.0 * params.N
+    k = len(hops)
+    assert k >= 1
+    INF = float("inf")
+    singles, costs = [], []
+    for hop in hops:
+        nbeta = hop.get("nbeta") or params.beta
+        min_ws = (nbeta + 4 + 2 * nbeta + 2) * row
+        sname = "pallas" if min_ws <= headroom * vmem_bytes else "mo"
+        singles.append(sname)
+        single_dev, shard_dev = _hlt_device_costs(
+            params, nbeta=nbeta, d=hop.get("d"), ctb=hop.get("ctb"),
+            n_uniq=hop.get("n_uniq"), n_model=n_model, n_ct=n_ct)
+        if n_model * n_ct <= 1 or sname != "pallas":
+            shard_dev = INF               # sharded not viable for this hop
+        costs.append((single_dev, shard_dev))
+    # DP over residency classes: 0 = single-device, 1 = sharded.
+    best = [list(costs[0])] + [[INF, INF] for _ in range(k - 1)]
+    back = [[0, 0] for _ in range(k)]
+    for h in range(1, k):
+        bnd = chain_boundary_bytes(params, level=hops[h].get("level"))
+        for c in (0, 1):
+            for p in (0, 1):
+                t = best[h - 1][p] + costs[h][c] + (bnd if p != c else 0.0)
+                if t < best[h][c]:
+                    best[h][c], back[h][c] = t, p
+    c = 0 if best[k - 1][0] <= best[k - 1][1] else 1
+    path = [c]
+    for h in range(k - 1, 0, -1):
+        c = back[h][c]
+        path.append(c)
+    path.reverse()
+    return tuple("sharded" if cls else singles[h] for h, cls in enumerate(path))
 
 
 def hlt_stage_costs(params: "HEParams", *, d: int, d_pad: int, nbeta: int,

@@ -143,16 +143,131 @@ def plan_hemm(eng: CkksEngine, m: int, l: int, n: int,
 
 
 def encrypt_matrix(eng: CkksEngine, keys: Keys, X: np.ndarray,
-                   rng: np.random.Generator) -> Ciphertext:
-    """Column-major flatten into the first rows·cols slots (paper Fig. 1)."""
+                   rng: np.random.Generator, level: Optional[int] = None,
+                   scale: Optional[float] = None) -> Ciphertext:
+    """Column-major flatten into the first rows·cols slots (paper Fig. 1).
+
+    ``level``/``scale`` default to the engine's top level / params.scale;
+    chain hops encrypt their weight at the HOP's input level (L − 3h) so
+    every Mult meets equal-level operands without a ModDown inside the
+    program (``HEMMChainProgram.encrypt_weights``)."""
     vec = np.asarray(X, dtype=np.float64).flatten(order="F")
-    return eng.encrypt(eng.encode(vec), keys, rng)
+    return eng.encrypt(eng.encode(vec, level=level, scale=scale), keys, rng)
 
 
 def decrypt_matrix(eng: CkksEngine, keys: Keys, ct: Ciphertext,
                    m: int, n: int) -> np.ndarray:
     vals = eng.decrypt_decode(ct, keys, num=m * n).real
     return vals.reshape((m, n), order="F")
+
+
+# ---------------------------------------------------------------------------
+# consecutive chains: Y = X·W1·W2·…·Wk under encryption (no decrypt round-trip)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainRepack:
+    """The re-pack pass between hop h and hop h+1.
+
+    hemm leaves hop h's m×n product column-major in slots [0, m·n) — and
+    ``encode_diagonals`` clips every diagonal of U to its row support
+    (i0 = max(0, -z) .. i1 = min(rows, cols - z)), so hop h+1's σ (an
+    m·l' × m·l' transform with l' = n) never reads a slot ≥ m·n.  The
+    re-pack is therefore the IDENTITY fold: the output window IS the next
+    hop's σ input encoding, junk beyond the window is provably never
+    touched, and no extra HLT level is spent between hops.
+
+    ``identity=True`` records that proof obligation (checked by
+    ``chain_repack``); ``repack="explicit"`` in ``plan_hemm_chain``
+    additionally materializes σ∘repack as its own DiagSet — numerically
+    bit-identical (the composed matrix equals u_sigma exactly), but a
+    distinct operand costing exactly one arena slot per boundary.  It
+    exercises the σ composition machinery and is the hook for foreign
+    input layouts (row-major, strided) that are NOT identity folds.
+    """
+    rows: int        # m (carried through the whole chain)
+    cols: int        # n of the previous hop == l of the next hop
+    window: int      # rows*cols slots the previous hop's output occupies
+    identity: bool   # column-major HEGMM layout -> identity fold (the lemma)
+
+    def matrix(self) -> np.ndarray:
+        """The re-pack as an m·l × m·l matrix over the next hop's σ domain
+        (identity for the native column-major layout)."""
+        return np.eye(self.rows * self.cols, dtype=np.float64)
+
+
+def chain_repack(prev: HeMMPlan, nxt: HeMMPlan) -> ChainRepack:
+    """Validate hop h -> hop h+1 hand-off and return the re-pack record."""
+    assert prev.m == nxt.m, \
+        f"chain carries m: hop out is {prev.m}x{prev.n}, next expects m={nxt.m}"
+    assert prev.n == nxt.l, \
+        f"shape chain broken: hop out is {prev.m}x{prev.n}, next is " \
+        f"{nxt.m}x{nxt.l}·{nxt.l}x{nxt.n}"
+    # the layout lemma: next σ's ambient dim == previous output window
+    assert nxt.ds_sigma.shape == (prev.m * prev.n, prev.m * prev.n)
+    return ChainRepack(rows=prev.m, cols=prev.n, window=prev.m * prev.n,
+                       identity=True)
+
+
+@dataclasses.dataclass
+class HeMMChainPlan:
+    """Math plan for Y = X·W1·…·Wk.  dims = (m, l, n1, …, nk): hop h
+    multiplies (m × dims[h+1]) by (dims[h+1] × dims[h+2])."""
+    dims: tuple
+    hops: tuple            # HeMMPlan per hop (repeated shapes share one plan)
+    repacks: tuple         # ChainRepack per hop boundary (k-1 entries)
+    repack: str            # "fold" (identity, zero extra operands) | "explicit"
+    rot_steps: tuple       # union over hops -> one keygen covers the chain
+
+    @property
+    def k(self) -> int:
+        return len(self.hops)
+
+    @property
+    def total_rotations(self) -> int:
+        return sum(h.total_rotations for h in self.hops)
+
+
+def plan_hemm_chain(eng: CkksEngine, dims, scale: Optional[float] = None,
+                    repack: str = "fold") -> HeMMChainPlan:
+    """Plan a k-hop chain.  ``dims = (m, l, n1, …, nk)`` (k = len(dims)-2
+    hops).  Hops with equal (m, l, n) share ONE HeMMPlan object — cached
+    PER ENGINE, so even chains planned in separate calls share it — and
+    their DiagSets land in one arena slot per compile point: operands are
+    stored once, not per hop and not per replan.
+    """
+    assert repack in ("fold", "explicit"), repack
+    dims = tuple(int(d) for d in dims)
+    assert len(dims) >= 4, "a chain needs >= 2 hops: dims = (m, l, n1, n2, …)"
+    m = dims[0]
+    by_shape = getattr(eng, "_chain_hop_plans", None)
+    if by_shape is None:
+        by_shape = eng._chain_hop_plans = {}
+    hops = []
+    for h in range(len(dims) - 2):
+        key = (m, dims[h + 1], dims[h + 2], scale)
+        if key not in by_shape:
+            by_shape[key] = plan_hemm(eng, *key[:3], scale=scale)
+        hops.append(by_shape[key])
+    repacks = tuple(chain_repack(hops[h], hops[h + 1])
+                    for h in range(len(hops) - 1))
+    if repack == "explicit":
+        # Materialize σ∘repack per interior hop: same matrix (identity
+        # compose), distinct DiagSet object => its own arena slot.
+        hops = [hops[0]] + [
+            dataclasses.replace(
+                hops[h + 1],
+                ds_sigma=encode_diagonals(
+                    eng,
+                    u_sigma(hops[h + 1].m, hops[h + 1].l) @ rp.matrix(),
+                    scale))
+            for h, rp in enumerate(repacks)]
+    steps = set()
+    for hp in hops:
+        steps.update(hp.rot_steps)
+    return HeMMChainPlan(dims, tuple(hops), repacks, repack,
+                         tuple(sorted(steps)))
 
 
 def hemm(eng: CkksEngine, ctA: Ciphertext, ctB: Ciphertext, plan: HeMMPlan,

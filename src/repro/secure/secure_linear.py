@@ -172,19 +172,63 @@ class SecureMatmulEngine:
 
 
 class SecureLinear:
-    """y = x @ W with an encrypted path (both x and W encrypted)."""
+    """y = x @ W with an encrypted path (both x and W encrypted).
+
+    Opt-in chain mode (``chain=(W2, …, Wk)``): the layer computes
+    y = x·W·W2·…·Wk as ONE compiled chain program
+    (``compile_hemm_chain``) — a 2–3 layer encrypted MLP block runs with
+    zero decrypts between hops, every weight encrypted once at its hop's
+    input level.  Chain mode is single-ciphertext (no tiling): every hop's
+    operand windows must fit one ciphertext, and the row count of ``x`` is
+    fixed at construction (``chain_rows``) because the chain plan's σ/τ
+    transforms are shape-specific.  The modulus chain must afford 3 levels
+    per hop (``repro.analysis.max_chain_depth``); construction fails
+    loudly otherwise — see ``configs/fame_sets.py`` FAME_CHAIN_SETS.
+    """
 
     def __init__(self, engine: SecureMatmulEngine, W: np.ndarray,
-                 rng: np.random.Generator):
+                 rng: np.random.Generator, chain=(),
+                 chain_rows: Optional[int] = None):
         self.engine = engine
-        self.W = W
+        self.W = np.asarray(W, dtype=np.float64)
+        self.chain_weights = tuple(np.asarray(w, dtype=np.float64)
+                                   for w in chain)
+        self._chain_prog = None
+        if self.chain_weights:
+            assert chain_rows is not None, \
+                "chain= mode runs x as ONE ciphertext: pass chain_rows " \
+                "(the fixed row count of x)"
+            from repro.core.compile import compile_hemm_chain
+            from repro.core.hemm import plan_hemm_chain
+            dims = (int(chain_rows), self.W.shape[0], self.W.shape[1],
+                    *[w.shape[1] for w in self.chain_weights])
+            self._chain = plan_hemm_chain(engine.eng, dims)
+            # one keyset covers the engine's tile plan AND the chain hops
+            steps = sorted(set(engine._plan.rot_steps)
+                           | set(self._chain.rot_steps))
+            engine.ctx.keygen(rng, rot_steps=tuple(steps))
+            self._chain_prog = compile_hemm_chain(engine.ctx, self._chain)
+            self._w_cts = self._chain_prog.encrypt_weights(
+                (self.W, *self.chain_weights), rng)
+            return
         if engine.ctx.keys is None:
             engine.keygen(rng)
         self._w_tiles = engine.encrypt_tiles(W, rng)   # model stays encrypted
 
     def __call__(self, x: np.ndarray, rng, secure: bool = True) -> np.ndarray:
         if not secure:
-            return x @ self.W
+            y = x @ self.W
+            for w in self.chain_weights:
+                y = y @ w
+            return y
+        if self._chain_prog is not None:
+            eng, ctx = self.engine.eng, self.engine.ctx
+            m, l = self._chain.dims[0], self._chain.dims[1]
+            assert tuple(x.shape) == (m, l), (x.shape, (m, l))
+            ctX = encrypt_matrix(eng, ctx.keys, x, rng)
+            ctY = self._chain_prog(ctX, self._w_cts)
+            return decrypt_matrix(eng, ctx.keys, ctY, m,
+                                  self._chain.dims[-1])
         xt = self.engine.encrypt_tiles(x, rng)
         ct = self.engine.matmul_encrypted(xt, self._w_tiles)
         return self.engine.decrypt_tiles(ct, x.shape[0], self.W.shape[1])

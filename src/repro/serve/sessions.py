@@ -38,7 +38,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.ckks import CkksEngine
-from repro.core.compile import HEContext, compile_blockmm
+from repro.core.compile import HEContext, compile_blockmm, compile_hemm_chain
 from repro.core.params import HEParams
 
 
@@ -213,6 +213,35 @@ class HEProgramCache:
                                schedule=schedule,
                                rotation_chunk=rotation_chunk,
                                a_slots=a_slots, b_slots=b_slots)
+        while len(self._entries) >= self.capacity:
+            self._entries.pop(next(iter(self._entries)))
+            self.evictions += 1
+        self._entries[key] = (prog, ctx._generation)
+        return prog
+
+    def get_chain(self, sess: TenantSession, chain, *,
+                  level: Optional[int] = None,
+                  schedules=None,
+                  rotation_chunk: Optional[int] = None):
+        """The serving entry point to ``compile_hemm_chain`` (counted):
+        per-tenant compiled multi-hop programs (a tenant's whole encrypted
+        MLP block as one cached program), keyed by the chain dims +
+        re-pack mode and generation-checked like ``get``."""
+        ctx = sess.ctx
+        key = (sess.tenant, "chain", chain.dims, chain.repack, level,
+               tuple(schedules) if schedules is not None else None,
+               rotation_chunk, ctx.n_model, ctx.n_ct, ctx.verify)
+        hit = self._entries.pop(key, None)
+        if hit is not None and hit[1] == ctx._generation:
+            self.hits += 1
+            self._entries[key] = hit
+            return hit[0]
+        if hit is not None:
+            self.evictions += 1
+        self.misses += 1
+        prog = compile_hemm_chain(ctx, chain, level=level,
+                                  schedules=schedules,
+                                  rotation_chunk=rotation_chunk)
         while len(self._entries) >= self.capacity:
             self._entries.pop(next(iter(self._entries)))
             self.evictions += 1

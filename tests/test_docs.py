@@ -54,7 +54,7 @@ def test_design_sections_cited_by_code_exist():
     (and keep their subjects)."""
     design = (ROOT / "DESIGN.md").read_text()
     for anchor in ("## §1", "## §2", "## §3", "## §4", "## §5", "## §6",
-                   "## §7"):
+                   "## §7", "## §8"):
         assert anchor in design, anchor
     assert "diagonal" in design.split("## §2")[1].split("## §3")[0].lower()
     assert "word-size" in design.split("## §3")[1].split("## §4")[0].lower()
@@ -64,9 +64,16 @@ def test_design_sections_cited_by_code_exist():
     for rule in ("LS001", "JX001", "JX004", "VM001", "AR001", "VF000"):
         assert rule in sec6, rule
     # §7 is the fused base-change datapath — stage coverage + knob
-    sec7 = design.split("## §7")[1]
+    sec7 = design.split("## §7")[1].split("## §8")[0]
     for word in ("datapath", "hoist", "ModDown", "psum", "JX004"):
         assert word in sec7, word
+    # §8 is the consecutive-chain pipeline — re-pack lemma, joint
+    # scheduling, max-depth proof and the rejection boundary
+    sec8 = design.split("## §8")[1]
+    for word in ("compile_hemm_chain", "re-pack", "identity",
+                 "select_chain_schedules", "max_chain_depth",
+                 "trace_chain", "VerificationError", "FAME_CHAIN_SETS"):
+        assert word in sec8, word
     # the §2 schedule table carries the stage-coverage columns
     sec2 = design.split("## §2")[1].split("## §3")[0]
     assert "Stage coverage" in sec2 and "ModDown+Rescale" in sec2

@@ -1,0 +1,448 @@
+"""Differential chain-testing harness for ``compile_hemm_chain``.
+
+Consecutive HE MM chains Y = X·W1·…·Wk must behave EXACTLY like the
+decrypt-between-hops pipeline they replace, minus the decrypts:
+
+* chain parity — every depth 2..max provable hops decrypts to the same
+  result as the decrypt-between-hops baseline within CKKS tolerance, on
+  both chain-capable parameter sets (``FAME_CHAIN_SETS``), including
+  non-square hop shapes (6×5·5×7·7×4·4×3);
+* trace exactness — ``trace_chain``'s per-hop (level, scale) prediction
+  equals execution float-exactly at EVERY hop, not just end to end;
+* rejection boundary — on the shallow ``FAME_VERIFY_SETS`` (L = 4/5) any
+  chain of depth >= 2 is REJECTED at compile: ``VerificationError`` under
+  ``verify="error"``, ``ValueError`` otherwise — no silent wrong-answer
+  region (the hypothesis property pins the iff);
+* accounting — a k-hop chain issues exactly 2·k HLT launches and k+1
+  program launches, ZERO decrypts, stores re-pack operands in one arena
+  slot each (the explicit-repack twin costs exactly one slot per
+  boundary, the identity fold costs zero) and dedups Step-2 hoisting to
+  2 products per hop;
+* sharded — a forced-4-host-device subprocess (the tests/test_sharded.py
+  harness) runs the whole chain under ``schedule="sharded"`` bit-exactly
+  vs single-device MO with exactly 2 psums per HLT launch and no other
+  collective (the sole-collective invariant, per hop).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.analysis import VerificationError, max_chain_depth, trace_chain
+from repro.configs.fame_sets import FAME_CHAIN_SETS, FAME_VERIFY_SETS
+from repro.core.ckks import CkksEngine
+from repro.core.compile import HEContext, compile_hemm, compile_hemm_chain
+from repro.core.hemm import (decrypt_matrix, encrypt_matrix, plan_hemm_chain)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# square hop edge per chain set (windows fit the ring's slot count)
+_SQUARE_EDGE = {"fame-s-chain": 3, "fame-m-chain": 4}
+_ALL_SETS = {**FAME_CHAIN_SETS, **FAME_VERIFY_SETS}
+# both chain sets have L = 9 -> exactly 3 provable hops (3 levels per hemm)
+MAX_HOPS = 3
+
+_CACHE: dict = {}
+
+
+def _ctx(name: str, datapath: str = "xla") -> HEContext:
+    """Cached context per (set, datapath) — keygen amortizes across tests."""
+    key = (name, datapath)
+    if key not in _CACHE:
+        ctx = HEContext(CkksEngine(_ALL_SETS[name]), verify="error",
+                        datapath=datapath)
+        _CACHE[key] = {"ctx": ctx, "steps": set()}
+    return _CACHE[key]["ctx"]
+
+
+def _keys(name: str, rot_steps, datapath: str = "xla") -> None:
+    """Ensure the cached context's keyset covers ``rot_steps`` (union
+    keygen; a new superset invalidates earlier programs, so tests compile
+    AFTER calling this)."""
+    ent = _CACHE[(name, datapath)]
+    if ent["ctx"].keys is None or not set(rot_steps) <= ent["steps"]:
+        ent["steps"] |= set(rot_steps)
+        ent["ctx"].keygen(np.random.default_rng(0),
+                          rot_steps=tuple(sorted(ent["steps"])))
+
+
+def _square_dims(name: str, depth: int) -> tuple:
+    return (_SQUARE_EDGE[name],) * (depth + 2)
+
+
+def _data(dims, rng):
+    """Bounded inputs so deep products stay well inside q0 at scale."""
+    X = rng.uniform(-0.5, 0.5, (dims[0], dims[1]))
+    Ws = [rng.uniform(-0.5, 0.5, (dims[h + 1], dims[h + 2]))
+          for h in range(len(dims) - 2)]
+    return X, Ws
+
+
+def _parity_check(name: str, dims, seed: int) -> None:
+    """Chained execution vs the decrypt-between-hops baseline vs plaintext,
+    with the zero-intermediate-decrypt counter assertion."""
+    ctx = _ctx(name)
+    eng = ctx.eng
+    chain = plan_hemm_chain(eng, dims)
+    _keys(name, chain.rot_steps)
+    prog = compile_hemm_chain(ctx, chain)
+    rng = np.random.default_rng(seed)
+    X, Ws = _data(dims, rng)
+    m, n = dims[0], dims[-1]
+
+    ctX = encrypt_matrix(eng, ctx.keys, X, rng)
+    w_cts = prog.encrypt_weights(Ws, rng)
+    d0 = eng.op_counts["decrypts"]
+    ct = prog(ctX, w_cts)
+    assert eng.op_counts["decrypts"] == d0      # zero intermediate decrypts
+    Y = decrypt_matrix(eng, ctx.keys, ct, m, n)
+
+    # decrypt-between-hops baseline: each hop a fresh top-level hemm with a
+    # decrypt/re-encrypt round-trip in between (what SecureLinear stacking
+    # used to do) — k - 1 intermediate decrypts the chain eliminates
+    y = X
+    for hp, W in zip(chain.hops, Ws, strict=True):
+        base = compile_hemm(ctx, hp)
+        cty = encrypt_matrix(eng, ctx.keys, y, rng)
+        ctw = encrypt_matrix(eng, ctx.keys, W, rng)
+        y = decrypt_matrix(eng, ctx.keys, base(cty, ctw), hp.m, hp.n)
+
+    ref = X
+    for W in Ws:
+        ref = ref @ W
+    assert np.abs(Y - y).max() < 5e-4           # chained == baseline
+    assert np.abs(Y - ref).max() < 5e-4         # both == plaintext
+    assert np.abs(y - ref).max() < 5e-4
+
+
+def _trace_exec_check(name: str, dims, seed: int = 11) -> None:
+    """trace_chain's per-hop (level, scale) == execution, float-exactly."""
+    ctx = _ctx(name)
+    eng, params = ctx.eng, ctx.eng.params
+    chain = plan_hemm_chain(eng, dims)
+    _keys(name, chain.rot_steps)
+    prog = compile_hemm_chain(ctx, chain)
+    rng = np.random.default_rng(seed)
+    X, Ws = _data(dims, rng)
+    ctX = encrypt_matrix(eng, ctx.keys, X, rng)
+    outs = prog.run_hops(ctX, prog.encrypt_weights(Ws, rng))
+    tr = trace_chain(eng.ctx.moduli_host, chain.hops, level=params.L,
+                     scale=params.scale)
+    assert tr.ok and len(tr.hop_states) == chain.k == len(outs)
+    for ct, st, planned in zip(outs, tr.hop_states, prog.plan.hop_out,
+                               strict=True):
+        assert ct.level == st.level == planned.level
+        assert ct.scale == st.scale == planned.scale   # exact, deliberate
+
+
+# ----------------------------------------------------------- chain parity
+
+@pytest.mark.parametrize("name", sorted(FAME_CHAIN_SETS))
+@pytest.mark.parametrize("depth", range(2, MAX_HOPS + 1))
+def test_chain_parity_vs_decrypt_between_hops(name, depth):
+    """Every depth 2..max provable hops, both chain sets: chained ==
+    decrypt-between-hops baseline == plaintext, zero intermediate
+    decrypts."""
+    assert max_chain_depth(
+        _ctx(name).eng.ctx.moduli_host,
+        dict(sigma_scale=1.0, tau_scale=1.0, eps_scales=[1.0],
+             omega_scales=[1.0]),
+        level=_ALL_SETS[name].L, scale=_ALL_SETS[name].scale) == MAX_HOPS
+    _parity_check(name, _square_dims(name, depth), seed=depth)
+
+
+def test_chain_parity_non_square_hops():
+    """6×5·5×7·7×4 (and the depth-3 ·4×3 extension): the re-pack identity
+    fold holds for rectangular windows too — hop h's m·n output window is
+    exactly hop h+1's σ input dimension."""
+    _parity_check("fame-m-chain", (6, 5, 7, 4), seed=21)
+    _parity_check("fame-m-chain", (6, 5, 7, 4, 3), seed=22)
+
+
+@pytest.mark.parametrize("name", sorted(FAME_CHAIN_SETS))
+def test_trace_levels_match_execution_exactly(name):
+    """Acceptance: depth-3 per-hop levels AND scales from trace_chain ==
+    execution with float equality (the tracker mirrors core/ckks.py
+    expression for expression, composed over hops)."""
+    dims = _square_dims(name, MAX_HOPS)
+    _trace_exec_check(name, dims)
+    ctx = _ctx(name)
+    prog = compile_hemm_chain(ctx, plan_hemm_chain(ctx.eng, dims))
+    L = ctx.eng.params.L
+    assert prog.plan.hop_levels == tuple(L - 3 * h for h in range(MAX_HOPS))
+    assert prog.plan.depth == 3 * MAX_HOPS
+    assert prog.plan.out_level == L - 3 * MAX_HOPS
+
+
+# ------------------------------------------------------ rejection boundary
+
+@pytest.mark.parametrize("name", sorted(FAME_VERIFY_SETS))
+def test_chain_rejected_on_shallow_sets(name):
+    """The verify sets (L = 4/5) prove exactly ONE hop: a depth-2 chain
+    must be rejected at compile — VerificationError carrying the trace's
+    LS findings under verify="error", ValueError under "warn" — while the
+    single hop still compiles."""
+    ctx = _ctx(name)
+    eng, params = ctx.eng, ctx.eng.params
+    chain = plan_hemm_chain(eng, (3, 3, 3, 3))
+    _keys(name, chain.rot_steps)
+    assert max_chain_depth(eng.ctx.moduli_host, chain.hops[0],
+                           level=params.L, scale=params.scale) == 1
+    with pytest.raises(VerificationError) as ei:
+        compile_hemm_chain(ctx, chain)
+    assert {d.rule for d in ei.value.diagnostics
+            if d.severity == "error"} <= {"LS001", "LS003"}
+    assert ctx.verify == "error"
+    try:
+        ctx.verify = "warn"
+        with pytest.raises(ValueError, match="needs input level"):
+            compile_hemm_chain(ctx, chain)
+    finally:
+        ctx.verify = "error"
+    assert compile_hemm(ctx, chain.hops[0]) is not None   # one hop fits
+
+
+# ------------------------------------------- datapaths + schedule oracles
+
+def test_chain_datapath_and_schedule_parity_depth3():
+    """Acceptance: the same depth-3 chain under datapath="pallas",
+    datapath="xla" and the u64 "mo" reference schedule produces bit-equal
+    ciphertexts (same keys, same inputs)."""
+    name = "fame-s-chain"
+    ctx_p = _ctx(name, datapath="pallas")
+    eng = ctx_p.eng
+    dims = _square_dims(name, MAX_HOPS)
+    chain = plan_hemm_chain(eng, dims)
+    _keys(name, chain.rot_steps, datapath="pallas")
+    prog_p = compile_hemm_chain(ctx_p, chain)
+    assert prog_p.plan.schedules == ("pallas",) * MAX_HOPS
+
+    rng = np.random.default_rng(31)
+    X, Ws = _data(dims, rng)
+    ctX = encrypt_matrix(eng, ctx_p.keys, X, rng)
+    w_cts = prog_p.encrypt_weights(Ws, rng)
+    out_p = prog_p(ctX, w_cts)
+
+    # same engine + keyset, different base-change lowering / schedule
+    ctx_x = HEContext(eng, ctx_p.keys, verify="error", datapath="xla")
+    out_x = compile_hemm_chain(ctx_x, chain)(ctX, w_cts)
+    out_m = compile_hemm_chain(ctx_x, chain, schedule="mo")(ctX, w_cts)
+    for other in (out_x, out_m):
+        assert np.array_equal(np.asarray(out_p.c0), np.asarray(other.c0))
+        assert np.array_equal(np.asarray(out_p.c1), np.asarray(other.c1))
+        assert (out_p.level, out_p.scale) == (other.level, other.scale)
+    ref = X
+    for W in Ws:
+        ref = ref @ W
+    got = decrypt_matrix(eng, ctx_p.keys, out_p, dims[0], dims[-1])
+    assert np.abs(got - ref).max() < 5e-4
+
+
+# --------------------------------------------------- launch/arena accounting
+
+def test_chain_launch_and_arena_accounting():
+    """A k-hop chain issues 2·k HLT launches + k+1 program launches and no
+    decrypts; recompiling allocates NOTHING new; re-pack operands cost one
+    arena slot each: zero for the identity fold (hop plans shared), exactly
+    one per boundary for the explicit σ∘repack twin; Step-2 hoisting dedups
+    to 2 products per hop (never 2·l)."""
+    params = FAME_CHAIN_SETS["fame-s-chain"]
+    ctx = HEContext(CkksEngine(params), verify="error")
+    eng = ctx.eng
+    chain = plan_hemm_chain(eng, (3, 3, 3, 3))          # k = 2
+    assert chain.hops[0] is chain.hops[1]               # shape-deduped plan
+    assert chain.repacks[0].identity
+    assert chain.repacks[0].window == 3 * 3
+    ctx.keygen(np.random.default_rng(0), rot_steps=chain.rot_steps)
+
+    prog = compile_hemm_chain(ctx, chain)
+    slots = len(ctx.arena._entries)
+    assert slots > 0
+    assert compile_hemm_chain(ctx, chain) is prog       # memoized
+    assert len(ctx.arena._entries) == slots             # no new operands
+
+    # explicit re-pack: same math, one extra operand slot per boundary
+    chain_x = plan_hemm_chain(eng, (3, 3, 3, 3), repack="explicit")
+    compile_hemm_chain(ctx, chain_x)
+    assert len(ctx.arena._entries) == slots + (chain.k - 1)
+
+    rng = np.random.default_rng(41)
+    X, Ws = _data(chain.dims, rng)
+    ctX = encrypt_matrix(eng, ctx.keys, X, rng)
+    w_cts = prog.encrypt_weights(Ws, rng)
+    before = dict(ctx.counters)
+    d0, e0 = eng.op_counts["decrypts"], eng.op_counts["encrypts"]
+    outs = prog.run_hops(ctX, w_cts)
+    assert len(outs) == chain.k
+    assert ctx.counters["hlt_launches"] - before["hlt_launches"] \
+        == 2 * chain.k                                  # Step-1 + Step-2/hop
+    assert ctx.counters["program_launches"] - before["program_launches"] \
+        == chain.k + 1                                  # chain + k hops
+    assert eng.op_counts["decrypts"] == d0              # fully encrypted
+    assert eng.op_counts["encrypts"] == e0              # no re-encrypts
+
+    for hop in prog.plan.hops:
+        # 2 unique hoisting products feed all 2·l Step-2 HLTs of the hop
+        assert hop.step2.hoist_bytes * hop.l == hop.step2.hoist_bytes_naive
+    assert prog.plan.hop_bytes == tuple(h.operand_bytes
+                                        for h in prog.plan.hops)
+    assert prog.plan.collective_bytes == 0              # no mesh, no psum
+
+
+def test_chain_program_cache_in_serving_layer():
+    """HEProgramCache.get_chain: per-tenant chain programs hit on repeat
+    dims and recompile (counted as eviction) after a generation bump."""
+    from repro.serve.sessions import HEProgramCache, TenantSession
+    params = FAME_CHAIN_SETS["fame-s-chain"]
+    ctx = HEContext(CkksEngine(params), verify="error")
+    chain = plan_hemm_chain(ctx.eng, (3, 3, 3, 3))
+    ctx.keygen(np.random.default_rng(0), rot_steps=chain.rot_steps)
+    sess = TenantSession("t0", ctx)
+    cache = HEProgramCache()
+    p1 = cache.get_chain(sess, chain)
+    assert (cache.hits, cache.misses) == (0, 1)
+    assert cache.get_chain(sess, chain) is p1
+    assert (cache.hits, cache.misses) == (1, 1)
+    ctx.keygen(np.random.default_rng(1), rot_steps=chain.rot_steps)
+    p2 = cache.get_chain(sess, chain)                   # stale generation
+    assert p2 is not p1 and cache.evictions == 1
+
+
+# ------------------------------------------------------ hypothesis properties
+
+def test_chain_trace_matches_execution_property():
+    """Property (hypothesis): random chain depths/shapes on both chain
+    sets — trace_chain's per-hop (level, scale) equals execution with
+    float equality."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=4, deadline=None)
+    @given(name=st.sampled_from(sorted(FAME_CHAIN_SETS)),
+           depth=st.integers(2, MAX_HOPS),
+           edges=st.lists(st.integers(2, 3), min_size=MAX_HOPS + 2,
+                          max_size=MAX_HOPS + 2))
+    def check(name, depth, edges):
+        _trace_exec_check(name, tuple(edges[: depth + 2]), seed=depth)
+
+    check()
+
+
+def test_chain_rejection_iff_trace_overflows_property():
+    """Property (hypothesis): over random depths and input levels,
+    compile_hemm_chain under verify="error" raises VerificationError
+    EXACTLY when trace_chain proves the chain exceeds the modulus chain —
+    no silent wrong-answer region on either side."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(name=st.sampled_from(sorted(FAME_CHAIN_SETS)),
+           depth=st.integers(2, 4), level=st.integers(0, 9))
+    def check(name, depth, level):
+        ctx = _ctx(name)
+        eng, params = ctx.eng, ctx.eng.params
+        chain = plan_hemm_chain(eng, (2,) * (depth + 2))
+        _keys(name, chain.rot_steps)
+        tr = trace_chain(eng.ctx.moduli_host, chain.hops, level=level,
+                         scale=params.scale)
+        fits = tr.ok
+        assert fits == (level >= 3 * depth)
+        if fits:
+            prog = compile_hemm_chain(ctx, chain, level=level,
+                                      schedule="mo")
+            assert prog.plan.out_level == tr.out.level == level - 3 * depth
+        else:
+            with pytest.raises(VerificationError):
+                compile_hemm_chain(ctx, chain, level=level, schedule="mo")
+
+    check()
+
+
+# ----------------------------------------------------- sharded (subprocess)
+
+def _run(code: str, devices: int = 4, timeout: int = 1200) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_chain_bit_exact_sole_collective_per_hop():
+    """Forced 4 host devices (2 data × 2 model): the depth-3 chain under
+    schedule="sharded" is bit-exact vs single-device MO at every hop, runs
+    zero intermediate decrypts, and each of its 6 HLT launches carries
+    exactly the 2 merged-ModDown psums and no other collective — the
+    sole-collective invariant, per hop (JX001 admitted it at compile
+    under verify="error")."""
+    code = textwrap.dedent("""
+        import json
+        import numpy as np
+        import repro
+        from repro.analysis import jaxpr_lint
+        from repro.core.ckks import CkksEngine
+        from repro.core.compile import HEContext, compile_hemm_chain
+        from repro.core.hemm import (plan_hemm_chain, encrypt_matrix,
+                                     decrypt_matrix)
+        from repro.core.params import toy_params
+        from repro.distributed import hlo_analysis
+        from repro.launch.mesh import make_mesh_for
+
+        params = toy_params(logN=6, L=9, k=3, beta=5, scale_bits=26)
+        mesh = make_mesh_for(4, model_parallel=2)     # data=2 x model=2
+        rng = np.random.default_rng(17)
+        ctx = HEContext(CkksEngine(params), mesh=mesh, verify="error")
+        chain = plan_hemm_chain(ctx.eng, (3, 3, 3, 3, 3))
+        ctx.keygen(rng, rot_steps=chain.rot_steps)
+        prog = compile_hemm_chain(ctx, chain, schedule="sharded")
+        X = rng.uniform(-0.5, 0.5, (3, 3))
+        Ws = [rng.uniform(-0.5, 0.5, (3, 3)) for _ in range(3)]
+        ctX = encrypt_matrix(ctx.eng, ctx.keys, X, rng)
+        w_cts = prog.encrypt_weights(Ws, rng)
+        d0 = ctx.eng.op_counts["decrypts"]
+        outs = prog.run_hops(ctX, w_cts)
+        dz = ctx.eng.op_counts["decrypts"] - d0
+        ref_ctx = HEContext(ctx.eng, ctx.keys)        # meshless oracle
+        outs_mo = compile_hemm_chain(ref_ctx, chain,
+                                     schedule="mo").run_hops(ctX, w_cts)
+        bit = all(np.array_equal(np.asarray(a.c0), np.asarray(b.c0)) and
+                  np.array_equal(np.asarray(a.c1), np.asarray(b.c1))
+                  for a, b in zip(outs, outs_mo))
+        ref = X @ Ws[0] @ Ws[1] @ Ws[2]
+        err = float(np.abs(decrypt_matrix(ctx.eng, ctx.keys, outs[-1],
+                                          3, 3) - ref).max())
+        census = []
+        for hp in prog._hops:
+            for run in (hp._step1, hp._step2):
+                c = hlo_analysis.jaxpr_collective_census(
+                    jaxpr_lint.sharded_jaxpr(run))
+                census.append([c["psums"],
+                               sum(c["other_collectives"].values())])
+        print(json.dumps(dict(
+            bit=bit, err=err, decrypts=dz, census=census,
+            levels=[o.level for o in outs],
+            exact=[o.level == s.level and o.scale == s.scale
+                   for o, s in zip(outs, prog.plan.hop_out)],
+            coll=prog.plan.collective_bytes, n_model=ctx.n_model)))
+    """)
+    r = _run(code)
+    assert r["bit"], r                       # bit-exact vs MO, every hop
+    assert r["err"] < 5e-4
+    assert r["decrypts"] == 0                # zero intermediate decrypts
+    assert r["census"] == [[2, 0]] * 6       # 2 psums/launch, nothing else
+    assert r["levels"] == [6, 3, 0]
+    assert all(r["exact"])                   # trace == execution, sharded too
+    assert r["coll"] > 0 and r["n_model"] == 2
